@@ -1,0 +1,113 @@
+"""Shared experiment runner for the paper-figure benchmarks.
+
+One (federated, centralized) pair of runs on identical data/split/seeds
+feeds Fig. 2 (convergence), Fig. 4 (alignment) and Fig. 5 (fairness).
+Results are cached as JSON so `python -m benchmarks.run` is cheap to
+re-run; delete results/paper_run*.json to force recomputation.
+
+Scale note: the paper runs 1300 rounds on an A30; the benchmark default is
+CPU-sized (multiple seeds x 400 rounds). EXPERIMENTS.md §Paper-claims uses
+a full-length overnight run of the same code path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from dataclasses import asdict, dataclass
+
+import numpy as np
+
+from repro.configs import FedConfig, GPOConfig
+from repro.core import CentralizedGPO, FederatedGPO
+from repro.core.fairness import convergence_round
+from repro.data import SurveyConfig, make_survey_data, split_groups
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+@dataclass
+class RunResult:
+    fed_loss: list
+    cen_loss: list
+    eval_rounds: list
+    fed_as: list
+    cen_as: list
+    fed_fi: list
+    cen_fi: list
+    fed_scores_last: list
+    cen_scores_last: list
+
+
+def run_pair(rounds: int, seed: int, num_groups: int = 17,
+             num_questions: int = 120, d_embed: int = 48) -> RunResult:
+    data = make_survey_data(SurveyConfig(
+        num_groups=num_groups, num_questions=num_questions,
+        d_embed=d_embed, seed=seed))
+    tr, ev = split_groups(data, train_frac=0.6, seed=seed)
+    gcfg = GPOConfig(d_embed=d_embed, d_model=96, num_layers=3,
+                     num_heads=4, d_ff=192)
+    fcfg = FedConfig(num_clients=len(tr), rounds=rounds, local_epochs=6,
+                     lr=3e-4, eval_every=10, num_context=12, num_target=12,
+                     seed=seed)
+    fed = FederatedGPO(gcfg, fcfg, data, tr, ev)
+    hist_f = fed.run(rounds=rounds)
+    cen = CentralizedGPO(gcfg, fcfg, data, tr, ev)
+    hist_c = cen.run(epochs=rounds)
+    return RunResult(
+        fed_loss=hist_f.round_loss, cen_loss=hist_c.round_loss,
+        eval_rounds=hist_f.eval_rounds,
+        fed_as=hist_f.eval_mean_as, cen_as=hist_c.eval_mean_as,
+        fed_fi=hist_f.eval_fi, cen_fi=hist_c.eval_fi,
+        fed_scores_last=np.asarray(hist_f.eval_scores[-1]).tolist(),
+        cen_scores_last=np.asarray(hist_c.eval_scores[-1]).tolist())
+
+
+def load_or_run(rounds: int = 400, seeds=(0, 1, 2, 3),
+                tag: str = "paper_run") -> list[RunResult]:
+    """Paper protocol: results averaged over four random seeds (§4.1)."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{tag}_{rounds}.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return [RunResult(**r) for r in json.load(f)]
+    # reuse a longer cached run if one exists (e.g. the full-length
+    # paper-claims artifact) rather than recomputing a shorter one
+    import glob
+
+    for cand in sorted(glob.glob(os.path.join(RESULTS_DIR, "paper_*.json")),
+                       reverse=True):
+        m = re.search(r"_(\d+)\.json$", cand)
+        if m and int(m.group(1)) >= rounds:
+            with open(cand) as f:
+                return [RunResult(**r) for r in json.load(f)]
+    results = [run_pair(rounds, s) for s in seeds]
+    with open(path, "w") as f:
+        json.dump([asdict(r) for r in results], f)
+    return results
+
+
+def summarize(results: list[RunResult]) -> dict:
+    """The paper's three headline numbers, averaged over seeds."""
+    speedups, as_improvements, fi_gaps = [], [], []
+    fed_conv, cen_conv = [], []
+    for r in results:
+        rf = convergence_round(np.asarray(r.fed_loss))
+        rc = convergence_round(np.asarray(r.cen_loss))
+        fed_conv.append(rf)
+        cen_conv.append(rc)
+        speedups.append(100.0 * (rc - rf) / max(rc, 1))
+        as_improvements.append(
+            100.0 * (r.fed_as[-1] - r.cen_as[-1]) / max(r.cen_as[-1], 1e-9))
+        fi_gaps.append(r.fed_fi[-1] - r.cen_fi[-1])
+    return {
+        "fed_convergence_round": float(np.mean(fed_conv)),
+        "cen_convergence_round": float(np.mean(cen_conv)),
+        "convergence_speedup_pct": float(np.mean(speedups)),
+        "alignment_improvement_pct": float(np.mean(as_improvements)),
+        "fed_final_as": float(np.mean([r.fed_as[-1] for r in results])),
+        "cen_final_as": float(np.mean([r.cen_as[-1] for r in results])),
+        "fed_final_fi": float(np.mean([r.fed_fi[-1] for r in results])),
+        "cen_final_fi": float(np.mean([r.cen_fi[-1] for r in results])),
+        "fi_gap": float(np.mean(fi_gaps)),
+    }

@@ -1,0 +1,87 @@
+"""Render the §Dry-run / §Roofline markdown tables from the sweep JSONL.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table \
+      --in results/dryrun.jsonl [--mp results/dryrun_mp.jsonl]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def _fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def load(path: str) -> list[dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if "error" not in r:
+                rows.append(r)
+    return rows
+
+
+def roofline_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | kind | compute_ms | memory_ms | collective_ms "
+           "| bottleneck | model/HLO flops | coll. mix |\n"
+           "|---|---|---|---:|---:|---:|---|---:|---|\n")
+    out = [hdr]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    for r in sorted(rows, key=lambda r: (r["arch"], order[r["shape"]])):
+        roof = r["roofline"]
+        mix = roof.get("collective_bytes_by_kind", {})
+        total = sum(mix.values()) or 1.0
+        mix_s = " ".join(
+            f"{k.replace('collective-', 'c-')}:{100 * v / total:.0f}%"
+            for k, v in sorted(mix.items(), key=lambda kv: -kv[1])[:3])
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {roof['compute_s'] * 1e3:.1f} "
+            f"| {roof['memory_s'] * 1e3:.1f} "
+            f"| {roof['collective_s'] * 1e3:.1f} "
+            f"| **{roof['bottleneck']}** "
+            f"| {roof['useful_ratio']:.2f} | {mix_s} |\n")
+    return "".join(out)
+
+
+def memory_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | params | args/chip | temp(total) | compile_s |\n"
+           "|---|---|---:|---:|---:|---:|\n")
+    out = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        mem = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['params'] / 1e9:.1f}B "
+            f"| {_fmt_bytes(mem.get('argument_size_in_bytes', 0))} "
+            f"| {_fmt_bytes(mem.get('temp_size_in_bytes', 0))} "
+            f"| {r['compile_s']:.0f} |\n")
+    return "".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun.jsonl")
+    ap.add_argument("--mp", default=None)
+    ap.add_argument("--memory", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.inp)
+    print(f"### Roofline (single-pod 16x16, {len(rows)} pairs)\n")
+    print(roofline_table(rows))
+    if args.memory:
+        print("\n### Memory / compile\n")
+        print(memory_table(rows))
+    if args.mp:
+        mp = load(args.mp)
+        print(f"\n### Multi-pod 2x16x16 ({len(mp)} pairs lowered+compiled)\n")
+        print(roofline_table(mp))
+
+
+if __name__ == "__main__":
+    main()

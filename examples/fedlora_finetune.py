@@ -1,0 +1,98 @@
+"""Federated fine-tuning of a ~100M-parameter backbone — the end-to-end
+training driver. Four clients hold disjoint synthetic corpora; each round
+runs local LM steps and FedAvg-aggregates either full parameters or LoRA
+adapters (the paper's technique applied to backbone training).
+
+  PYTHONPATH=src python examples/fedlora_finetune.py --rounds 150 \
+      --local-steps 2 --mode lora
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, override
+from repro.core import (
+    broadcast_to_clients,
+    init_lora,
+    lora_param_count,
+    make_backbone_fedavg_round,
+    make_fedlora_round,
+    normalize_weights,
+)
+from repro.data import LMDataConfig, synthetic_lm_batches
+from repro.launch.specs import count_params
+from repro.models import init_params
+from repro.optim import adam
+
+
+def hundred_m_config():
+    """A ~100M-parameter member of the qwen2 family (same block type)."""
+    return override(
+        get_arch("qwen2-0.5b"), name="qwen2-100m", num_layers=16,
+        d_model=640, num_heads=10, num_kv_heads=2, head_dim=64,
+        d_ff=2560, vocab_size=32000, param_dtype="float32",
+        activation_dtype="float32")  # ~114M params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=150)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mode", choices=["full", "lora"], default="lora")
+    args = ap.parse_args()
+
+    cfg = hundred_m_config()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    print(f"backbone: {cfg.name} with {count_params(cfg)/1e6:.0f}M params")
+
+    opt = adam(3e-4)
+    c = args.clients
+    # heterogeneous client corpora: different seeds + sizes -> Eq. 2 weights
+    sizes = jnp.asarray([100.0, 80.0, 60.0, 40.0][:c])
+    weights = normalize_weights(sizes)
+    iters = [synthetic_lm_batches(LMDataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=10 + i)) for i in range(c)]
+
+    if args.mode == "full":
+        payload = params
+        rnd = jax.jit(make_backbone_fedavg_round(cfg, opt, args.local_steps))
+    else:
+        payload = init_lora(params, key, rank=8)
+        print(f"LoRA payload: {lora_param_count(payload)/1e6:.2f}M params "
+              f"({100*lora_param_count(payload)/count_params(cfg):.2f}% of "
+              "the backbone) — the federated communication volume")
+        rnd = jax.jit(make_fedlora_round(cfg, params, opt, args.local_steps))
+
+    client_state = broadcast_to_clients(payload, c)
+    opt_states = jax.vmap(opt.init)(client_state)
+
+    t0 = time.time()
+    total_steps = 0
+    for r in range(args.rounds):
+        batches = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[jax.tree.map(lambda *ys: jnp.stack(ys),
+                           *[next(iters[i]) for _ in range(args.local_steps)])
+              for i in range(c)])
+        client_state, opt_states, losses = rnd(client_state, opt_states,
+                                               batches, weights)
+        total_steps += c * args.local_steps
+        if r % max(1, args.rounds // 15) == 0:
+            print(f"round {r:4d} ({total_steps:5d} client steps) "
+                  f"losses={np.round(np.asarray(losses), 4)}")
+    dt = time.time() - t0
+    print(f"\n{args.rounds} rounds = {total_steps} client steps "
+          f"in {dt:.0f}s; final mean loss "
+          f"{float(jnp.mean(losses)):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Pytree checkpointing to .npz (atomic, step-indexed).
+
+Works for model params, optimizer state, and full federated state (stacked
+per-client trees). On a real multi-host pod each host saves only addressable
+shards; here (single-host) we gather to host memory, which is also what the
+dry-run needs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_SEP = "|"  # flat-key separator (path components may contain '/')
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # numpy cannot serialize ml_dtypes (bfloat16 etc.): store as
+            # f32 (exact superset); restore casts back to the model dtype.
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree,
+                    metadata: dict | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **{k.replace("/", _SEP): v for k, v in flat.items()})
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    if metadata is not None:
+        with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+            json.dump(metadata, f, indent=2, default=str)
+    return path
+
+
+def restore_checkpoint(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    with np.load(path) as data:
+        flat = {k.replace(_SEP, "/"): data[k] for k in data.files}
+
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    out = []
+    for p, leaf in leaves_with_paths:
+        key = jax.tree_util.keystr(p)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs model {leaf.shape}")
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_checkpoint(directory: str) -> str | None:
+    if not os.path.isdir(directory):
+        return None
+    best, best_step = None, -1
+    for fn in os.listdir(directory):
+        m = re.fullmatch(r"ckpt_(\d+)\.npz", fn)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(directory, fn), int(m.group(1))
+    return best

@@ -1,0 +1,282 @@
+"""Config system.
+
+Every architecture in the assigned pool is expressed as a ``ModelConfig``;
+the paper's own module is a ``GPOConfig``; the federated runtime is a
+``FedConfig``.  Configs are frozen dataclasses so they can be closed over by
+jitted functions and hashed as static arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+from repro.utils.registry import Registry
+
+# ---------------------------------------------------------------------------
+# Block kinds
+# ---------------------------------------------------------------------------
+ATTN = "attn"  # full/windowed self-attention + MLP (dense or MoE)
+MAMBA = "mamba"  # Mamba2 SSD block
+GLOBAL = -1  # sentinel window: attend to everything (causal)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A single decoder (or encoder-decoder) LM backbone.
+
+    The zoo is expressed with one config class: dense/GQA, MoE, SSM, hybrid,
+    enc-dec, and embedding-input (VLM / audio) variants are all field
+    combinations, which is what lets one `train_step` / `serve_step` and one
+    sharding rule-set cover all ten assigned architectures.
+    """
+
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | vlm | audio
+    source: str = ""  # citation for the assigned config
+
+    # trunk
+    num_layers: int = 2
+    d_model: int = 256
+    vocab_size: int = 1024
+
+    # attention
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 64
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    attn_logit_softcap: Optional[float] = None  # gemma2-style soft capping
+    final_logit_softcap: Optional[float] = None
+    rope_theta: float = 10_000.0
+    rope_theta_global: Optional[float] = None  # gemma3: different theta for global
+    # sliding-window pattern, cycled over attention layers. -1 == global.
+    window_pattern: Tuple[int, ...] = (GLOBAL,)
+
+    # MLP / MoE
+    d_ff: int = 1024
+    num_experts: int = 0  # 0 => dense MLP
+    experts_per_token: int = 0
+    router_aux_coef: float = 0.01
+    moe_capacity_factor: float = 1.25  # tokens dropped beyond capacity
+
+    # SSM (Mamba2 / SSD)
+    ssm_state_size: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+
+    # layer pattern: cycled to num_layers. ("attn",) pure transformer,
+    # ("mamba",) pure SSM. Hybrid (zamba2) uses block_pattern plus
+    # shared_attn_every (a single *shared-weight* attention block applied
+    # after every k trunk layers, as in Zamba2).
+    block_pattern: Tuple[str, ...] = (ATTN,)
+    shared_attn_every: int = 0  # 0 => no shared block
+
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    enc_layers: int = 0
+    enc_seq_len: int = 0  # fixed encoder length (e.g. 1500 audio frames)
+
+    # input modality: "tokens" -> int32 token ids; "embeddings" -> the
+    # modality frontend is a stub and the model consumes (B, S, d_model)
+    # precomputed embeddings (VLM patch embeddings / audio frames).
+    input_kind: str = "tokens"
+
+    # numerics
+    param_dtype: str = "bfloat16"
+    activation_dtype: str = "bfloat16"
+
+    # serving
+    long_context_variant: bool = False  # pure-dense archs get a SWA override
+    long_context_window: int = 4096
+    # ring-buffer decode caches for sliding-window layers (periodic
+    # local:global patterns): local layers allocate W slots instead of the
+    # full context (§Perf optimization; off = paper-faithful baseline)
+    ring_cache: bool = False
+
+    # normalization
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    scale_embeddings: bool = False  # gemma: embed * sqrt(d_model)
+    use_post_norm: bool = False  # gemma2/3 sandwich norm
+
+    # ---------------------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer block kind, block_pattern cycled to num_layers."""
+        p = self.block_pattern
+        return tuple(p[i % len(p)] for i in range(self.num_layers))
+
+    def attn_layer_windows(self, seq_hint: int = 0) -> Tuple[int, ...]:
+        """Window size per *attention* layer (cycled window_pattern).
+
+        GLOBAL (-1) stays -1; consumers replace it with the running sequence
+        length. Ordering matches the order attention layers appear in
+        ``layer_kinds()``.
+        """
+        n_attn = sum(1 for k in self.layer_kinds() if k == ATTN)
+        p = self.window_pattern
+        return tuple(p[i % len(p)] for i in range(n_attn))
+
+    def validate(self) -> None:
+        assert self.num_heads % max(self.num_kv_heads, 1) == 0, self.name
+        if self.is_moe:
+            assert 0 < self.experts_per_token <= self.num_experts, self.name
+        kinds = set(self.layer_kinds())
+        if MAMBA in kinds:
+            assert self.ssm_state_size > 0, self.name
+        if self.is_encoder_decoder:
+            assert self.enc_layers > 0 and self.enc_seq_len > 0, self.name
+
+
+@dataclass(frozen=True)
+class GPOConfig:
+    """The paper's module: the transformer-based preference predictor.
+
+    An in-context neural process (Zhao et al. 2023, GPO): inputs are
+    (embedding, preference) context pairs and embedding-only targets; the
+    model predicts the target preferences. PluralLLM trains this with
+    FedAvg across groups.
+    """
+
+    d_embed: int = 64  # frozen-backbone embedding width (4096 for Alpaca-7B)
+    d_model: int = 128
+    num_layers: int = 4
+    num_heads: int = 4
+    d_ff: int = 256
+    dropout: float = 0.0
+    norm_eps: float = 1e-6
+    # Gaussian likelihood: if learn_sigma the head emits (mu, log_sigma),
+    # else sigma=1 and Eq. 1's NLL reduces to MSE (GPO's practice).
+    learn_sigma: bool = False
+    param_dtype: str = "float32"
+    # use the Pallas neural-process attention kernel for INFERENCE
+    # (interpret mode on CPU; native on TPU). The kernel has no custom
+    # VJP, so training keeps the jnp path. False = jnp everywhere.
+    use_pallas_attention: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+
+@dataclass(frozen=True)
+class FedConfig:
+    """PluralLLM federated runtime (paper §3.1–3.2, §4.3)."""
+
+    num_clients: int = 10  # |G_train|
+    num_eval_groups: int = 7  # |G_eval| (60/40 split in the paper)
+    rounds: int = 1300  # communication rounds (paper: 1300)
+    local_epochs: int = 6  # paper: 6 local epochs per round
+    lr: float = 3e-4  # paper: Adam 3e-4
+    eval_every: int = 10  # paper: every 10 rounds
+    # in-context split per local epoch
+    num_context: int = 16  # m context points
+    num_target: int = 16  # n - m target points
+    batch_groups: int = 0  # 0 => all clients participate each round (paper)
+    # re-initialize client Adam moments each round (the paper leaves this
+    # unspecified; stale moments vs freshly-aggregated params can slow FL)
+    reset_opt_each_round: bool = False
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Generic backbone training (LM objective) settings."""
+
+    global_batch: int = 8
+    seq_len: int = 128
+    steps: int = 10
+    lr: float = 3e-4
+    warmup_steps: int = 10
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    seed: int = 0
+    # remat policy for the layer scan: "none" | "full" | "dots"
+    remat: str = "none"
+
+
+@dataclass(frozen=True)
+class InputShape:
+    """One of the four assigned workload shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+# registry: arch id -> ModelConfig factory
+ARCHITECTURES: Registry = Registry("architecture")
+
+
+def get_arch(name: str) -> ModelConfig:
+    cfg = ARCHITECTURES.get(name)
+    cfg.validate()
+    return cfg
+
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced variant of the same family: 2 layers, d_model<=512,
+    <=4 experts — runnable on CPU in a test."""
+    updates = dict(
+        num_layers=2,
+        d_model=min(cfg.d_model, 256),
+        num_heads=4,
+        num_kv_heads=min(4, max(1, cfg.num_kv_heads)),
+        head_dim=64,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        param_dtype="float32",
+        activation_dtype="float32",
+    )
+    if cfg.is_moe:
+        updates.update(num_experts=4, experts_per_token=min(2, cfg.experts_per_token),
+                       moe_capacity_factor=4.0)  # drop-free for exact tests
+    if cfg.ssm_state_size:
+        updates.update(ssm_state_size=min(cfg.ssm_state_size, 32), ssm_head_dim=32,
+                       ssm_chunk=16)
+    if cfg.is_encoder_decoder:
+        updates.update(enc_layers=2, enc_seq_len=32)
+    if cfg.shared_attn_every:
+        updates.update(shared_attn_every=2)
+    if len(cfg.window_pattern) > 1 or cfg.window_pattern[0] != GLOBAL:
+        # keep the local/global alternation but shrink windows
+        updates.update(
+            window_pattern=tuple(min(w, 16) if w > 0 else w for w in cfg.window_pattern)
+        )
+    out = replace(cfg, name=cfg.name + "-smoke", **updates)
+    out.validate()
+    return out
+
+
+def override(cfg, **kw):
+    """Dataclass-replace with validation (public config-override hook)."""
+    out = replace(cfg, **kw)
+    if isinstance(out, ModelConfig):
+        out.validate()
+    return out
+
+
+def config_dict(cfg) -> dict:
+    return dataclasses.asdict(cfg)

@@ -1,0 +1,29 @@
+# The paper's primary contribution: the GPO preference predictor trained
+# with FedAvg across groups (PluralLLM), plus the centralized baseline,
+# fairness metrics, FedLoRA, and the federated backbone trainers.
+from repro.core.gpo import (  # noqa: F401
+    gpo_apply,
+    gpo_loss,
+    init_gpo_params,
+    predict_preferences,
+)
+from repro.core.fedavg import (  # noqa: F401
+    broadcast_to_clients,
+    fedavg_allreduce,
+    fedavg_flat,
+    fedavg_stacked,
+    normalize_weights,
+)
+from repro.core.federated import FederatedGPO, History, make_sharded_round  # noqa: F401
+from repro.core.centralized import CentralizedGPO  # noqa: F401
+from repro.core import fairness  # noqa: F401
+from repro.core.lora import apply_lora, init_lora, lora_param_count  # noqa: F401
+from repro.core.trainer import (  # noqa: F401
+    greedy_decode,
+    lm_loss,
+    make_backbone_fedavg_round,
+    make_fedlora_round,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)

@@ -1,0 +1,90 @@
+"""Centralized GPO baseline (paper §4.3, "Centralized Learning").
+
+The original GPO training loop: ONE model, trained for E epochs; within
+each epoch the model is updated *sequentially* for each training group
+(one in-context batch per group), unlike FL where updates are aggregated
+per communication round. This is the comparison baseline for Figs. 2/4/5.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig, GPOConfig
+from repro.core import fairness
+from repro.core.federated import History, _make_eval_group
+from repro.core.gpo import gpo_loss, init_gpo_params
+from repro.data.surveys import SurveyData, sample_icl_batch
+from repro.optim import adam
+
+
+class CentralizedGPO:
+    def __init__(self, gpo_cfg: GPOConfig, fed_cfg: FedConfig,
+                 data: SurveyData, train_groups: np.ndarray,
+                 eval_groups: np.ndarray):
+        self.gpo_cfg, self.fed_cfg, self.data = gpo_cfg, fed_cfg, data
+        self.train_groups = jnp.asarray(train_groups, jnp.int32)
+        self.eval_groups = jnp.asarray(eval_groups, jnp.int32)
+        self.opt = adam(fed_cfg.lr)
+
+        key = jax.random.PRNGKey(fed_cfg.seed)
+        self.params = init_gpo_params(gpo_cfg, key)
+        self.opt_state = self.opt.init(self.params)
+        eval_group = _make_eval_group(gpo_cfg, fed_cfg, data)
+
+        @jax.jit
+        def epoch_fn(params, opt_state, key):
+            """One epoch: sequential gradient steps, one per group."""
+
+            def group_step(carry, inp):
+                params, opt_state = carry
+                k, gid = inp
+                batch = sample_icl_batch(k, data, gid, fed_cfg.num_context,
+                                         fed_cfg.num_target)
+                loss, grads = jax.value_and_grad(gpo_loss)(
+                    params, gpo_cfg, batch.ctx_x, batch.ctx_y, batch.tgt_x,
+                    batch.tgt_y)
+                params, opt_state = self.opt.update(grads, opt_state, params)
+                return (params, opt_state), loss
+
+            n = len(train_groups)
+            k_perm, k_steps = jax.random.split(key)
+            order = jax.random.permutation(k_perm, self.train_groups)
+            keys = jax.random.split(k_steps, n)
+            (params, opt_state), losses = jax.lax.scan(
+                group_step, (params, opt_state), (keys, order))
+            return params, opt_state, jnp.mean(losses)
+
+        @jax.jit
+        def eval_fn(params, key):
+            keys = jax.random.split(key, len(eval_groups))
+            return jax.vmap(eval_group, in_axes=(None, 0, 0))(
+                params, keys, self.eval_groups)
+
+        self._epoch = epoch_fn
+        self._eval = eval_fn
+
+    def run(self, epochs: int | None = None, log_every: int = 0) -> History:
+        fed = self.fed_cfg
+        epochs = epochs or fed.rounds
+        hist = History()
+        key = jax.random.PRNGKey(fed.seed + 2)
+        for e in range(epochs):
+            key, k_epoch, k_eval = jax.random.split(key, 3)
+            self.params, self.opt_state, loss = self._epoch(
+                self.params, self.opt_state, k_epoch)
+            hist.round_loss.append(float(loss))
+            if e % fed.eval_every == 0 or e == epochs - 1:
+                scores = np.asarray(self._eval(self.params, k_eval))
+                hist.eval_rounds.append(e)
+                hist.eval_scores.append(scores)
+                hist.eval_mean_as.append(float(scores.mean()))
+                hist.eval_fi.append(float(fairness.fairness_index(scores)))
+                hist.eval_cov.append(
+                    float(fairness.coefficient_of_variation(scores)))
+                if log_every and e % log_every == 0:
+                    print(f"[cen] epoch {e:5d} loss={hist.round_loss[-1]:.4f} "
+                          f"AS={hist.eval_mean_as[-1]:.4f} "
+                          f"FI={hist.eval_fi[-1]:.4f}")
+        return hist

@@ -1,0 +1,62 @@
+"""Alignment & fairness metrics (paper §4.4).
+
+* Alignment Score AS(P1, P2; Q) — Eq. 4. The paper writes the mean JSD;
+  its figures treat AS as higher-is-better (GPO's convention is
+  1 - JSD), so we implement AS = mean_q (1 - JSD(P1(q), P2(q))) and note
+  the sign convention here. JSD is the Jensen-Shannon *distance*
+  (sqrt of base-2 divergence, bounded [0, 1]).
+* CoV (Eq. 5) and Fairness Index FI = 1/(1+CoV^2) (Eq. 6).
+* Convergence round: first round reaching 95% of the total loss descent
+  (paper §4.4 "95% of its final loss value").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_EPS = 1e-12
+
+
+def kl_divergence(p: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """KL(p || q) in bits, last axis, safe for zeros."""
+    p = jnp.clip(p, _EPS, 1.0)
+    q = jnp.clip(q, _EPS, 1.0)
+    return jnp.sum(p * (jnp.log2(p) - jnp.log2(q)), axis=-1)
+
+
+def js_distance(p: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Jensen-Shannon distance in [0, 1] (sqrt of base-2 JS divergence)."""
+    m = 0.5 * (p + q)
+    div = 0.5 * kl_divergence(p, m) + 0.5 * kl_divergence(q, m)
+    return jnp.sqrt(jnp.clip(div, 0.0, 1.0))
+
+
+def alignment_score(p1: jnp.ndarray, p2: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 4 over a set of questions: p1, p2 (Q, A) -> scalar in [0, 1]."""
+    return jnp.mean(1.0 - js_distance(p1, p2))
+
+
+def coefficient_of_variation(scores: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 5 over per-group alignment scores (K,)."""
+    mu = jnp.mean(scores)
+    sigma = jnp.sqrt(jnp.mean(jnp.square(scores - mu)))
+    return sigma / jnp.maximum(mu, _EPS)
+
+
+def fairness_index(scores: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 6: FI = 1 / (1 + CoV^2); 1 == perfect equal opportunity."""
+    cov = coefficient_of_variation(scores)
+    return 1.0 / (1.0 + jnp.square(cov))
+
+
+def convergence_round(losses: np.ndarray, frac: float = 0.95) -> int:
+    """First index where 95% of the total descent (loss_0 -> loss_final)
+    has been achieved. Returns len(losses)-1 if never."""
+    losses = np.asarray(losses, np.float64)
+    if losses.size == 0:
+        return 0
+    start, final = losses[0], losses[-1]
+    threshold = start - frac * (start - final)
+    idx = np.nonzero(losses <= threshold)[0]
+    return int(idx[0]) if idx.size else len(losses) - 1

@@ -1,0 +1,74 @@
+"""FedAvg aggregation (paper Eq. 2-3) in three equivalent forms.
+
+1. ``fedavg_stacked`` — single-process simulation: client trees stacked on
+   a leading C axis, weighted sum along it. The paper-faithful CPU path.
+2. ``fedavg_allreduce`` — the TPU-native form used inside ``shard_map``:
+   each client shard scales its params by p_g and one weighted
+   ``lax.psum`` over the client mesh axis *is* the aggregation server
+   (DESIGN.md §3). Hierarchical (multi-pod) FedAvg is the same psum over
+   ('pod', 'data').
+3. ``fedavg_flat`` — flattened-vector form matching the ``fedavg_reduce``
+   Pallas kernel contract (used by kernel tests and benchmarks).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import (
+    tree_flatten_to_vector,
+    tree_unflatten_from_vector,
+)
+
+PyTree = Any
+
+
+def normalize_weights(sizes: jnp.ndarray) -> jnp.ndarray:
+    """p_g = |D_g| / sum_g' |D_g'|  (Eq. 2)."""
+    sizes = jnp.asarray(sizes, jnp.float32)
+    return sizes / jnp.sum(sizes)
+
+
+def fedavg_stacked(stacked_params: PyTree, weights: jnp.ndarray) -> PyTree:
+    """Eq. 3 for client-stacked trees: leaves (C, ...) -> (...)."""
+    w = jnp.asarray(weights, jnp.float32)
+
+    def agg(leaf):
+        wf = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(leaf.astype(jnp.float32) * wf, axis=0).astype(leaf.dtype)
+
+    return jax.tree.map(agg, stacked_params)
+
+
+def broadcast_to_clients(params: PyTree, num_clients: int) -> PyTree:
+    """Redistribute the global model to every client (server -> clients)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (num_clients,) + x.shape), params)
+
+
+def fedavg_allreduce(local_params: PyTree, weight: jnp.ndarray,
+                     axis_names: Sequence[str] | str) -> PyTree:
+    """Inside shard_map: weighted psum over the client axis/axes.
+
+    ``weight`` is this client's p_g (already normalized across the axis).
+    The psum plays the aggregation server; the result is already
+    'redistributed' because every shard holds it.
+    """
+    return jax.tree.map(
+        lambda x: jax.lax.psum(x.astype(jnp.float32) * weight, axis_names)
+        .astype(x.dtype),
+        local_params)
+
+
+def fedavg_flat(stacked_params: PyTree, weights: jnp.ndarray) -> PyTree:
+    """Flattened-vector FedAvg (the Pallas `fedavg_reduce` contract)."""
+    num_clients = weights.shape[0]
+    like = jax.tree.map(lambda x: x[0], stacked_params)
+    vecs = jnp.stack([
+        tree_flatten_to_vector(jax.tree.map(lambda x: x[c], stacked_params))
+        for c in range(num_clients)
+    ])  # (C, P)
+    avg = jnp.einsum("c,cp->p", jnp.asarray(weights, jnp.float32), vecs)
+    return tree_unflatten_from_vector(avg, like)

@@ -1,0 +1,223 @@
+"""PluralLLM federated runtime (paper §3, §4.3).
+
+Round structure (faithful to the paper):
+  1. server broadcasts global GPO params to all training clients (groups);
+  2. every client runs ``local_epochs`` Adam steps; each step samples
+     context questions + target questions from the client's private
+     preference data (in-context objective, Eq. 1);
+  3. clients transmit parameters; the server aggregates with
+     dataset-size weights p_g (Eq. 2-3) and redistributes.
+
+Two execution engines expose the same round semantics:
+
+* ``FederatedGPO`` — clients vmapped on one device. This is the
+  paper-faithful simulation used for the CPU experiments (benchmarks
+  reproduce Figs. 2-5 with it).
+* ``make_sharded_round`` — clients laid out on the mesh `data` axis via
+  ``shard_map``; local epochs run without any cross-client collective and
+  the round ends in ONE weighted psum (+ the hierarchical `pod` axis on
+  multi-pod meshes). This is the TPU-production engine the dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig, GPOConfig
+from repro.core import fairness
+from repro.core.fedavg import (
+    broadcast_to_clients,
+    fedavg_allreduce,
+    fedavg_stacked,
+    normalize_weights,
+)
+from repro.core.gpo import gpo_loss, init_gpo_params, predict_preferences
+from repro.data.surveys import SurveyData, sample_icl_batch
+from repro.optim import adam
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Local training (one client, `local_epochs` steps) — shared by both engines
+# ---------------------------------------------------------------------------
+def _make_local_train(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
+                      data: SurveyData, opt):
+    def local_train(params, opt_state, key, group_id):
+        def epoch_step(carry, k):
+            params, opt_state = carry
+            batch = sample_icl_batch(k, data, group_id,
+                                     fed_cfg.num_context, fed_cfg.num_target)
+            loss, grads = jax.value_and_grad(gpo_loss)(
+                params, gpo_cfg, batch.ctx_x, batch.ctx_y, batch.tgt_x,
+                batch.tgt_y)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return (params, opt_state), loss
+
+        keys = jax.random.split(key, fed_cfg.local_epochs)
+        (params, opt_state), losses = jax.lax.scan(
+            epoch_step, (params, opt_state), keys)
+        return params, opt_state, jnp.mean(losses)
+
+    return local_train
+
+
+def _make_eval_group(gpo_cfg: GPOConfig, fed_cfg: FedConfig, data: SurveyData):
+    """AS of the global model on one (unseen) group — Eq. 4."""
+
+    def eval_group(params, key, group_id):
+        batch = sample_icl_batch(key, data, group_id,
+                                 fed_cfg.num_context, fed_cfg.num_target)
+        pred = predict_preferences(params, gpo_cfg, batch.ctx_x, batch.ctx_y,
+                                   batch.tgt_x, data.num_options)
+        truth = batch.tgt_y.reshape(-1, data.num_options)
+        return fairness.alignment_score(pred, truth)
+
+    return eval_group
+
+
+# ---------------------------------------------------------------------------
+# Engine 1: vmapped clients (paper-faithful CPU simulation)
+# ---------------------------------------------------------------------------
+@dataclass
+class History:
+    round_loss: list = field(default_factory=list)  # mean client loss / round
+    eval_rounds: list = field(default_factory=list)
+    eval_scores: list = field(default_factory=list)  # (K,) per eval round
+    eval_mean_as: list = field(default_factory=list)
+    eval_fi: list = field(default_factory=list)
+    eval_cov: list = field(default_factory=list)
+
+
+class FederatedGPO:
+    def __init__(self, gpo_cfg: GPOConfig, fed_cfg: FedConfig,
+                 data: SurveyData, train_groups: np.ndarray,
+                 eval_groups: np.ndarray):
+        assert gpo_cfg.d_embed == data.phi.shape[-1]
+        self.gpo_cfg, self.fed_cfg, self.data = gpo_cfg, fed_cfg, data
+        self.train_groups = jnp.asarray(train_groups, jnp.int32)
+        self.eval_groups = jnp.asarray(eval_groups, jnp.int32)
+        self.weights = normalize_weights(data.sizes[self.train_groups])
+        self.opt = adam(fed_cfg.lr)
+
+        key = jax.random.PRNGKey(fed_cfg.seed)
+        self.global_params = init_gpo_params(gpo_cfg, key)
+        per_client = broadcast_to_clients(self.global_params,
+                                          len(train_groups))
+        self.opt_states = jax.vmap(self.opt.init)(per_client)
+
+        local_train = _make_local_train(gpo_cfg, fed_cfg, data, self.opt)
+        eval_group = _make_eval_group(gpo_cfg, fed_cfg, data)
+        num_clients = len(train_groups)
+        # partial participation (beyond-paper ablation): sample
+        # batch_groups clients per round; weights renormalize over the
+        # participants (paper §4.3 assumes full participation).
+        m = fed_cfg.batch_groups or num_clients
+        m = min(m, num_clients)
+
+        @jax.jit
+        def round_fn(global_params, opt_states, key):
+            k_sub, k_train = jax.random.split(key)
+            if m < num_clients:
+                idx = jax.random.choice(k_sub, num_clients, (m,),
+                                        replace=False)
+            else:
+                idx = jnp.arange(num_clients)
+            groups = self.train_groups[idx]
+            sizes = data.sizes[groups].astype(jnp.float32)
+            w = sizes / jnp.sum(sizes)
+            client_params = broadcast_to_clients(global_params, m)
+            if fed_cfg.reset_opt_each_round:
+                opt_sub = jax.vmap(self.opt.init)(client_params)
+            else:
+                opt_sub = jax.tree.map(lambda x: x[idx], opt_states)
+            keys = jax.random.split(k_train, m)
+            client_params, opt_sub, losses = jax.vmap(local_train)(
+                client_params, opt_sub, keys, groups)
+            opt_states = jax.tree.map(
+                lambda full, sub: full.at[idx].set(sub), opt_states,
+                opt_sub)
+            new_global = fedavg_stacked(client_params, w)
+            return new_global, opt_states, losses
+
+        @jax.jit
+        def eval_fn(global_params, key):
+            keys = jax.random.split(key, len(eval_groups))
+            return jax.vmap(eval_group, in_axes=(None, 0, 0))(
+                global_params, keys, self.eval_groups)
+
+        self._round = round_fn
+        self._eval = eval_fn
+
+    def run(self, rounds: int | None = None,
+            log_every: int = 0) -> History:
+        fed = self.fed_cfg
+        rounds = rounds or fed.rounds
+        hist = History()
+        key = jax.random.PRNGKey(fed.seed + 1)
+        for r in range(rounds):
+            key, k_round, k_eval = jax.random.split(key, 3)
+            self.global_params, self.opt_states, losses = self._round(
+                self.global_params, self.opt_states, k_round)
+            hist.round_loss.append(float(jnp.mean(losses)))
+            if r % fed.eval_every == 0 or r == rounds - 1:
+                scores = np.asarray(self._eval(self.global_params, k_eval))
+                hist.eval_rounds.append(r)
+                hist.eval_scores.append(scores)
+                hist.eval_mean_as.append(float(scores.mean()))
+                hist.eval_fi.append(float(fairness.fairness_index(scores)))
+                hist.eval_cov.append(
+                    float(fairness.coefficient_of_variation(scores)))
+                if log_every and r % log_every == 0:
+                    print(f"[fed] round {r:5d} loss={hist.round_loss[-1]:.4f} "
+                          f"AS={hist.eval_mean_as[-1]:.4f} "
+                          f"FI={hist.eval_fi[-1]:.4f}")
+        return hist
+
+
+# ---------------------------------------------------------------------------
+# Engine 2: shard_map over the mesh client axis (TPU production / dry-run)
+# ---------------------------------------------------------------------------
+def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
+                       data: SurveyData, mesh, client_axes=("data",),
+                       opt=None) -> Callable:
+    """Returns round_fn(client_params, opt_states, keys, group_ids, weights)
+    with every argument carrying a leading *global* client axis sharded over
+    ``client_axes``. Aggregation = ONE weighted psum over those axes —
+    the virtualized server. Multi-pod: client_axes=("pod", "data") gives
+    hierarchical FedAvg.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    opt = opt or adam(fed_cfg.lr)
+    local_train = _make_local_train(gpo_cfg, fed_cfg, data, opt)
+    axes = tuple(client_axes)
+    spec = P(axes)
+
+    def round_body(client_params, opt_states, keys, group_ids, weights):
+        # local shard: (C_local, ...) clients; train without collectives
+        new_params, new_opt, losses = jax.vmap(local_train)(
+            client_params, opt_states, keys, group_ids)
+        # Eq. 3: weighted psum over the client axes == aggregation server.
+        local_weighted = jax.tree.map(
+            lambda x: jnp.sum(
+                x.astype(jnp.float32)
+                * weights.reshape((-1,) + (1,) * (x.ndim - 1)), axis=0),
+            new_params)
+        global_params = fedavg_allreduce(
+            local_weighted, jnp.asarray(1.0, jnp.float32), axes)
+        # redistribute: every client's next-round start is the global model
+        c_local = keys.shape[0]
+        client_params = broadcast_to_clients(global_params, c_local)
+        return client_params, new_opt, losses
+
+    in_specs = (spec, spec, spec, spec, spec)
+    out_specs = (spec, spec, spec)
+    return shard_map(round_body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)

@@ -1,0 +1,153 @@
+"""GPO: the transformer-based group preference predictor (Zhao et al. 2023),
+the module PluralLLM trains federatedly.
+
+A transformer neural process (TNP-style):
+
+* every (embedding x, preference y) pair becomes one token [x ; y ; is_ctx];
+  target tokens carry y = 0 and is_ctx = 0;
+* NO positional encoding — the predictor must be permutation-invariant in
+  the context set (property-tested in tests/test_property.py);
+* the neural-process mask: context tokens attend to context tokens;
+  target tokens attend to context tokens and themselves, never to other
+  targets (no information leaks between targets — Eq. 1's conditional
+  independence);
+* the head reads target tokens and emits the predicted preference
+  (Gaussian mean; optional learned sigma), trained with Eq. 1's NLL,
+  which for fixed sigma is MSE — GPO's practice.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GPOConfig
+from repro.models.layers import dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+class GPOLayer(NamedTuple):
+    ln1: jnp.ndarray
+    wq: jnp.ndarray
+    wk: jnp.ndarray
+    wv: jnp.ndarray
+    wo: jnp.ndarray
+    ln2: jnp.ndarray
+    w1: jnp.ndarray
+    w2: jnp.ndarray
+
+
+def init_gpo_params(cfg: GPOConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 4)
+    d = cfg.d_model
+
+    def init_layer(k):
+        ks = jax.random.split(k, 6)
+        return GPOLayer(
+            ln1=jnp.zeros((d,), dtype),
+            wq=dense_init(ks[0], (d, d), dtype=dtype),
+            wk=dense_init(ks[1], (d, d), dtype=dtype),
+            wv=dense_init(ks[2], (d, d), dtype=dtype),
+            wo=dense_init(ks[3], (d, d), dtype=dtype),
+            ln2=jnp.zeros((d,), dtype),
+            w1=dense_init(ks[4], (d, cfg.d_ff), dtype=dtype),
+            w2=dense_init(ks[5], (cfg.d_ff, d), dtype=dtype),
+        )
+
+    layer_keys = jax.random.split(keys[0], cfg.num_layers)
+    out_dim = 2 if cfg.learn_sigma else 1
+    return {
+        # token = [x ; y ; is_context] -> d_model
+        "in_proj": dense_init(keys[1], (cfg.d_embed + 2, d), dtype=dtype),
+        "layers": jax.vmap(init_layer)(layer_keys),
+        "final_norm": jnp.zeros((d,), dtype),
+        "head": dense_init(keys[2], (d, out_dim), dtype=dtype),
+    }
+
+
+def _np_mask(num_ctx: int, num_tgt: int) -> jnp.ndarray:
+    """Neural-process attention mask (S, S), S = m + t.
+
+    allowed[i, j] = True iff token i may attend token j:
+      * j < m (context): always allowed,
+      * j >= m: only if i == j (target self-attention).
+    """
+    s = num_ctx + num_tgt
+    is_ctx_col = jnp.arange(s) < num_ctx
+    eye = jnp.eye(s, dtype=bool)
+    return jnp.broadcast_to(is_ctx_col[None, :], (s, s)) | eye
+
+
+def gpo_apply(params: dict, cfg: GPOConfig, ctx_x, ctx_y, tgt_x):
+    """Predict target preferences.
+
+    ctx_x (m, d_embed), ctx_y (m,), tgt_x (t, d_embed)
+    -> (mu (t,), log_sigma (t,) or None)
+    Batch with vmap for multiple groups.
+    """
+    m, t = ctx_x.shape[0], tgt_x.shape[0]
+    ctx_tok = jnp.concatenate(
+        [ctx_x, ctx_y[:, None], jnp.ones((m, 1), ctx_x.dtype)], axis=-1)
+    tgt_tok = jnp.concatenate(
+        [tgt_x, jnp.zeros((t, 2), tgt_x.dtype)], axis=-1)
+    tokens = jnp.concatenate([ctx_tok, tgt_tok], axis=0)  # (S, d_embed+2)
+
+    x = tokens @ params["in_proj"]  # (S, d)
+    mask = _np_mask(m, t)
+    h_dim = cfg.head_dim
+    nh = cfg.num_heads
+
+    def body(x, layer: GPOLayer):
+        layer = GPOLayer(*layer)
+        h = rms_norm(x, layer.ln1, cfg.norm_eps)
+        s = h.shape[0]
+        q = (h @ layer.wq).reshape(s, nh, h_dim)
+        k = (h @ layer.wk).reshape(s, nh, h_dim)
+        v = (h @ layer.wv).reshape(s, nh, h_dim)
+        if cfg.use_pallas_attention:
+            from repro.kernels import gpo_attention
+
+            att = gpo_attention(q, k, v, num_ctx=m).reshape(s, -1)
+        else:
+            scores = jnp.einsum("ihd,jhd->hij", q, k) / jnp.sqrt(
+                jnp.asarray(h_dim, jnp.float32))
+            scores = jnp.where(mask[None], scores, NEG_INF)
+            probs = jax.nn.softmax(scores.astype(jnp.float32),
+                                   axis=-1).astype(v.dtype)
+            att = jnp.einsum("hij,jhd->ihd", probs, v).reshape(s, -1)
+        x = x + att @ layer.wo
+        h2 = rms_norm(x, layer.ln2, cfg.norm_eps)
+        x = x + jax.nn.gelu(h2 @ layer.w1) @ layer.w2
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    out = x[m:] @ params["head"]  # (t, 1 or 2)
+    mu = out[:, 0]
+    log_sigma = out[:, 1] if cfg.learn_sigma else None
+    return mu, log_sigma
+
+
+def gpo_loss(params: dict, cfg: GPOConfig, ctx_x, ctx_y, tgt_x, tgt_y):
+    """Eq. 1: NLL of target preferences given context (Gaussian p_theta)."""
+    mu, log_sigma = gpo_apply(params, cfg, ctx_x, ctx_y, tgt_x)
+    if log_sigma is None:
+        return jnp.mean(jnp.square(mu - tgt_y))
+    inv_var = jnp.exp(-2.0 * log_sigma)
+    return jnp.mean(0.5 * inv_var * jnp.square(mu - tgt_y) + log_sigma)
+
+
+def predict_preferences(params: dict, cfg: GPOConfig, ctx_x, ctx_y, tgt_x,
+                        num_options: int) -> jnp.ndarray:
+    """Predicted preference distributions per target question.
+
+    tgt_x is (t*A, d_embed) grouped by question (A consecutive options).
+    Returns (t, A) rows on the simplex (clip-and-normalize, GPO's eval).
+    """
+    mu, _ = gpo_apply(params, cfg, ctx_x, ctx_y, tgt_x)
+    scores = mu.reshape(-1, num_options)
+    scores = jnp.clip(scores, 1e-4, None)
+    return scores / scores.sum(axis=-1, keepdims=True)

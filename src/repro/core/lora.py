@@ -1,0 +1,84 @@
+"""LoRA adapters — the federated payload for backbones too large for
+full-parameter FedAvg (DESIGN.md §3, "FedLoRA").
+
+The frozen backbone is sharded FSDP-style (identical across clients, so it
+may shard over the client axis); only the adapter tree diverges per client
+and is FedAvg-aggregated. This matches the paper's own frozen-embedder
+design and its FederatedScope-LLM / FedBiot citations.
+
+Adapters are keyed by flat-leaf index (``{"17": {"a": ..., "b": ...}}``) so
+the adapter tree is a plain pytree: it stacks per-client, vmaps, psums, and
+checkpoints exactly like any parameter tree.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+# parameter-path substrings that receive adapters (attention + mlp mats)
+DEFAULT_TARGETS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+                   "in_proj", "out_proj")
+
+
+def init_lora(params: PyTree, key, rank: int = 8, alpha: float = 16.0,
+              targets=DEFAULT_TARGETS) -> dict:
+    """A/B factors for every targeted 2-D (or stacked 3-D) leaf.
+
+    Stacked per-layer leaves (L, d, f) get per-layer adapters (L, d, r) /
+    (L, r, f) so the layer scan stays intact.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    adapters: dict[str, dict] = {}
+    for i, (path, leaf) in enumerate(flat):
+        p = jax.tree_util.keystr(path)
+        if not any(t in p for t in targets):
+            continue
+        if leaf.ndim == 2:
+            d, f = leaf.shape
+            batch = ()
+        elif leaf.ndim == 3:  # stacked over layers
+            _, d, f = leaf.shape
+            batch = (leaf.shape[0],)
+        else:
+            continue
+        k = jax.random.fold_in(key, i)
+        a = (jax.random.normal(k, batch + (d, rank))
+             / jnp.sqrt(d)).astype(leaf.dtype)
+        b = jnp.zeros(batch + (rank, f), leaf.dtype)
+        adapters[str(i)] = {"a": a, "b": b}
+    return {"adapters": adapters,
+            "scale": jnp.asarray(alpha / rank, jnp.float32)}
+
+
+def apply_lora(params: PyTree, lora: dict) -> PyTree:
+    """Effective params: W + scale * A @ B where an adapter exists."""
+    flat, treedef = jax.tree.flatten(params)
+    scale = lora["scale"]
+    out = list(flat)
+    for idx_str, ad in lora["adapters"].items():
+        i = int(idx_str)
+        w = flat[i]
+        delta = jnp.einsum("...dr,...rf->...df",
+                           ad["a"].astype(jnp.float32),
+                           ad["b"].astype(jnp.float32))
+        out[i] = (w.astype(jnp.float32) + scale * delta).astype(w.dtype)
+    return jax.tree.unflatten(treedef, out)
+
+
+def lora_param_count(lora: dict) -> int:
+    return int(sum(x.size for ad in lora["adapters"].values()
+                   for x in (ad["a"], ad["b"])))
+
+
+def make_lora_forward(forward_fn: Callable, params: PyTree) -> Callable:
+    """forward(lora, *args) with the frozen backbone closed over — the
+    trainable tree (and thus the FedAvg payload) is only the adapters."""
+
+    def fn(lora, *args, **kwargs):
+        return forward_fn(apply_lora(params, lora), *args, **kwargs)
+
+    return fn

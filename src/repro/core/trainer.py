@@ -1,0 +1,196 @@
+"""Backbone training / serving steps + federated backbone trainers.
+
+These step functions are what the launcher jits and the dry-run lowers:
+
+* ``make_train_step``   — LM loss (+ MoE aux), grad, optimizer update,
+                          optional microbatch gradient accumulation and
+                          activation remat (both required to fit the
+                          largest archs' train_4k on 16 GB/chip).
+* ``make_prefill_step`` — full-sequence forward that materializes the
+                          decode cache.
+* ``make_serve_step``   — ONE token against the cache (the decode_32k /
+                          long_500k shapes lower exactly this).
+* ``make_backbone_fedavg_round`` / ``make_fedlora_round`` — the paper's
+  technique applied to backbone training: clients run local steps, then
+  Eq. 3 weighted-averages full params (small archs) or LoRA adapters
+  (large archs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.fedavg import broadcast_to_clients, fedavg_stacked
+from repro.core.lora import apply_lora
+from repro.models import forward
+from repro.models.layers import cross_entropy_loss
+from repro.optim import Optimizer
+from repro.utils.pytree import tree_zeros_like
+
+PyTree = Any
+
+
+def lm_loss(params, cfg: ModelConfig, batch: dict) -> jnp.ndarray:
+    logits, _, aux = forward(
+        params, cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        enc_embeds=batch.get("enc_embeds"),
+        remat=batch.get("_remat", False))
+    # final softcap is applied inside forward; plain CE here
+    loss = cross_entropy_loss(logits, batch["labels"])
+    return loss + aux
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer, *,
+                    microbatch: int = 1, remat: bool = False) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        b = dict(batch)
+        b["_remat"] = remat
+        return lm_loss(params, cfg, b)
+
+    def train_step(params, opt_state, batch):
+        if microbatch <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split_mb(x):
+                return x.reshape((microbatch, x.shape[0] // microbatch)
+                                 + x.shape[1:])
+
+            mb = jax.tree.map(split_mb, batch)
+
+            def acc_step(carry, mb_batch):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb_batch)
+                return (loss_acc + loss,
+                        jax.tree.map(jnp.add, grad_acc, grads)), None
+
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32),
+                           tree_zeros_like(params)), mb)
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int) -> Callable:
+    """(params, batch) -> (last_logits, cache)."""
+
+    def prefill_step(params, batch):
+        logits, cache, _ = forward(
+            params, cfg,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+            prefill_len=max_seq)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """(params, cache, tokens (B,1), cache_pos) -> (logits (B,V), cache).
+
+    ONE new token against a ``seq_len`` KV cache / SSM state — the step the
+    decode input-shapes lower.
+    """
+
+    def serve_step(params, cache, tokens, cache_pos):
+        logits, cache, _ = forward(params, cfg, tokens=tokens, cache=cache,
+                                   cache_pos=cache_pos)
+        return logits[:, 0], cache
+
+    return serve_step
+
+
+def greedy_decode(cfg: ModelConfig, params, cache, first_token, start_pos,
+                  num_steps: int):
+    """Greedy generation loop (lax.scan) for the serving example."""
+    serve = make_serve_step(cfg)
+
+    def body(carry, _):
+        tok, cache, pos = carry
+        logits, cache = serve(params, cache, tok, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return (nxt, cache, pos + 1), nxt[:, 0]
+
+    (_, cache, _), toks = jax.lax.scan(
+        body, (first_token, cache, jnp.asarray(start_pos, jnp.int32)),
+        None, length=num_steps)
+    return toks.T, cache  # (B, num_steps)
+
+
+# ---------------------------------------------------------------------------
+# Federated backbone training (the paper's technique as a trainer feature)
+# ---------------------------------------------------------------------------
+def make_backbone_fedavg_round(cfg: ModelConfig, opt: Optimizer,
+                               local_steps: int) -> Callable:
+    """Full-parameter FedAvg over backbones (feasible <= few-B params).
+
+    (client_params (C, ...), opt_states, batches (C, local_steps, ...),
+     weights (C,)) -> (new client params, opt_states, mean loss per client).
+    One round = local_steps LM steps per client + Eq. 3 aggregation +
+    redistribution. vmap engine (tests/CPU); the launcher swaps in the
+    shard_map engine with the same body.
+    """
+    step = make_train_step(cfg, opt)
+
+    def local_train(params, opt_state, batches):
+        def body(carry, batch):
+            params, opt_state = carry
+            params, opt_state, m = step(params, opt_state, batch)
+            return (params, opt_state), m["loss"]
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), batches)
+        return params, opt_state, jnp.mean(losses)
+
+    def round_fn(client_params, opt_states, batches, weights):
+        client_params, opt_states, losses = jax.vmap(local_train)(
+            client_params, opt_states, batches)
+        global_params = fedavg_stacked(client_params, weights)
+        num_clients = weights.shape[0]
+        return (broadcast_to_clients(global_params, num_clients),
+                opt_states, losses)
+
+    return round_fn
+
+
+def make_fedlora_round(cfg: ModelConfig, frozen_params, opt: Optimizer,
+                       local_steps: int) -> Callable:
+    """FedAvg over LoRA adapters with a frozen (shared) backbone — the
+    production recipe for grok-1-class archs (DESIGN.md §3)."""
+
+    def loss_fn(lora, batch):
+        eff = apply_lora(frozen_params, lora)
+        return lm_loss(eff, cfg, batch)
+
+    def local_train(lora, opt_state, batches):
+        def body(carry, batch):
+            lora, opt_state = carry
+            loss, grads = jax.value_and_grad(loss_fn)(lora, batch)
+            lora, opt_state = opt.update(grads, opt_state, lora)
+            return (lora, opt_state), loss
+
+        (lora, opt_state), losses = jax.lax.scan(
+            body, (lora, opt_state), batches)
+        return lora, opt_state, jnp.mean(losses)
+
+    def round_fn(client_lora, opt_states, batches, weights):
+        client_lora, opt_states, losses = jax.vmap(local_train)(
+            client_lora, opt_states, batches)
+        global_lora = fedavg_stacked(client_lora, weights)
+        num_clients = weights.shape[0]
+        return (broadcast_to_clients(global_lora, num_clients),
+                opt_states, losses)
+
+    return round_fn

@@ -1,0 +1,9 @@
+from repro.data.surveys import (  # noqa: F401
+    SurveyConfig,
+    SurveyData,
+    make_survey_data,
+    sample_icl_batch,
+    split_groups,
+)
+from repro.data.embeddings import StubEmbedder, BackboneEmbedder  # noqa: F401
+from repro.data.lm_data import LMDataConfig, synthetic_lm_batches  # noqa: F401

@@ -1,0 +1,153 @@
+"""Synthetic PewResearch-style global-opinion survey data.
+
+The paper trains on Pew Global Attitudes Surveys (GlobalOpinionQA): each
+*group* (country / demographic) answers multiple-choice opinion questions;
+the label for (group, question) is the aggregated answer distribution over
+the question's options.
+
+That dataset is not redistributable offline, so we generate a synthetic
+population with matched structure and controllable heterogeneity:
+
+* every question q has ``num_options`` options with feature embeddings
+  phi(q, a) — the stand-in for the frozen-LLM embedding of the
+  concatenated (question, answer) text;
+* every group g has a latent opinion vector w_g drawn from one of
+  ``num_archetypes`` clusters plus Dirichlet-controlled idiosyncrasy;
+* the group's answer distribution is softmax_a( phi(q,a) . w_g / temp ).
+
+Because preferences are a *function of the embeddings*, an in-context
+learner (GPO) can genuinely infer a group's latent w_g from context
+questions and generalize to held-out questions and unseen groups — the same
+structural property the real dataset has, which is what the paper's
+experiments measure.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SurveyConfig:
+    num_groups: int = 17
+    num_questions: int = 120
+    num_options: int = 5
+    d_embed: int = 64
+    num_archetypes: int = 4
+    idiosyncrasy: float = 0.35  # scale of per-group deviation from archetype
+    temperature: float = 0.8  # sharpness of group answer distributions
+    min_questions_frac: float = 0.6  # groups observe a random subset of Qs
+    seed: int = 0
+
+
+class SurveyData(NamedTuple):
+    """Arrays describing the full synthetic survey population."""
+
+    phi: jnp.ndarray  # (Q, A, d_embed) frozen-LLM embedding of (q, a) text
+    prefs: jnp.ndarray  # (G, Q, A) per-group answer distributions (simplex)
+    mask: jnp.ndarray  # (G, Q) bool: did group g answer question q
+    sizes: jnp.ndarray  # (G,) |D_g| = number of answered questions
+    group_w: jnp.ndarray  # (G, d_embed) latent opinion vectors (debug only)
+
+    @property
+    def num_groups(self) -> int:
+        return self.prefs.shape[0]
+
+    @property
+    def num_questions(self) -> int:
+        return self.prefs.shape[1]
+
+    @property
+    def num_options(self) -> int:
+        return self.prefs.shape[2]
+
+
+def make_survey_data(cfg: SurveyConfig) -> SurveyData:
+    key = jax.random.PRNGKey(cfg.seed)
+    k_phi, k_arch, k_assign, k_idio, k_mask = jax.random.split(key, 5)
+
+    phi = jax.random.normal(k_phi, (cfg.num_questions, cfg.num_options, cfg.d_embed))
+    phi = phi / jnp.linalg.norm(phi, axis=-1, keepdims=True)
+
+    archetypes = jax.random.normal(k_arch, (cfg.num_archetypes, cfg.d_embed))
+    assign = jax.random.randint(k_assign, (cfg.num_groups,), 0, cfg.num_archetypes)
+    idio = cfg.idiosyncrasy * jax.random.normal(
+        k_idio, (cfg.num_groups, cfg.d_embed))
+    group_w = archetypes[assign] + idio  # (G, d)
+
+    logits = jnp.einsum("qad,gd->gqa", phi, group_w) / cfg.temperature
+    prefs = jax.nn.softmax(logits, axis=-1)
+
+    # groups answer a random subset of questions -> unequal |D_g| so the
+    # FedAvg weights p_g = |D_g| / sum |D_g'| are non-trivial (Eq. 2).
+    frac = jax.random.uniform(
+        k_mask, (cfg.num_groups, cfg.num_questions),
+        minval=0.0, maxval=1.0)
+    keep_prob = cfg.min_questions_frac + (1.0 - cfg.min_questions_frac) * (
+        jax.random.uniform(jax.random.fold_in(k_mask, 1), (cfg.num_groups, 1)))
+    mask = frac < keep_prob
+    # guarantee a minimum so context/target sampling never starves
+    min_q = max(8, int(cfg.min_questions_frac * cfg.num_questions) // 2)
+    order = jnp.argsort(~mask, axis=1)  # answered first
+    forced = jnp.zeros_like(mask).at[
+        jnp.arange(cfg.num_groups)[:, None], order[:, :min_q]].set(True)
+    mask = mask | forced
+    sizes = mask.sum(axis=1)
+
+    return SurveyData(phi=phi, prefs=prefs, mask=mask, sizes=sizes,
+                      group_w=group_w)
+
+
+def split_groups(data: SurveyData, train_frac: float = 0.6,
+                 seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """60/40 train/eval group split as in the paper (§4.2)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(data.num_groups)
+    n_train = max(1, int(round(train_frac * data.num_groups)))
+    return perm[:n_train], perm[n_train:]
+
+
+class ICLBatch(NamedTuple):
+    """One in-context batch for the GPO predictor (flattened to points).
+
+    A "point" is one (question, option) pair: x = phi(q, a), y = P_g(a | q).
+    Context questions contribute all their options as observed points;
+    target questions contribute all options with y to be predicted.
+    """
+
+    ctx_x: jnp.ndarray  # (m*A, d_embed)
+    ctx_y: jnp.ndarray  # (m*A,)
+    tgt_x: jnp.ndarray  # (t*A, d_embed)
+    tgt_y: jnp.ndarray  # (t*A,) ground truth for the loss
+    tgt_q: jnp.ndarray  # (t*A,) int32 question index of each target point
+    num_options: int
+
+
+def sample_icl_batch(key: jax.Array, data: SurveyData, group: int,
+                     num_context: int, num_target: int) -> ICLBatch:
+    """Sample context/target questions for one group (paper §3.1).
+
+    Sampling is done over the group's *answered* questions. Runs under jit
+    (group may be traced) — uses masked categorical sampling.
+    """
+    g_mask = data.mask[group]  # (Q,)
+    logits = jnp.where(g_mask, 0.0, -1e9)
+    qs = jax.random.choice(
+        key, data.num_questions, shape=(num_context + num_target,),
+        replace=False, p=jax.nn.softmax(logits))
+    ctx_q, tgt_q = qs[:num_context], qs[num_context:]
+
+    def gather(q_idx):
+        x = data.phi[q_idx]  # (n, A, d)
+        y = data.prefs[group, q_idx]  # (n, A)
+        return (x.reshape(-1, x.shape[-1]), y.reshape(-1))
+
+    ctx_x, ctx_y = gather(ctx_q)
+    tgt_x, tgt_y = gather(tgt_q)
+    tgt_qids = jnp.repeat(tgt_q, data.num_options)
+    return ICLBatch(ctx_x=ctx_x, ctx_y=ctx_y, tgt_x=tgt_x, tgt_y=tgt_y,
+                    tgt_q=tgt_qids, num_options=data.num_options)

@@ -1,0 +1,11 @@
+# Pallas TPU kernels for the compute hot spots: flash attention (backbone),
+# GPO neural-process attention (the paper's module), Mamba2 SSD scan, and
+# the FedAvg weighted reduction (the paper's aggregation, Eq. 3).
+from repro.kernels.ops import (  # noqa: F401
+    fedavg_reduce,
+    fedavg_reduce_tree,
+    flash_attention,
+    gpo_attention,
+    ssd_scan,
+)
+from repro.kernels import ref  # noqa: F401

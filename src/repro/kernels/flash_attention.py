@@ -1,0 +1,141 @@
+"""Flash attention Pallas TPU kernel.
+
+Online-softmax attention with:
+  * causal masking,
+  * optional sliding window (gemma2/3 local layers; the long_500k dense
+    variant),
+  * optional logit softcapping (gemma2), fused before max/exp,
+  * GQA via index-mapped KV BlockSpecs — the repeated KV heads are never
+    materialized in HBM; each q-head grid row maps to its kv head.
+
+Grid: (batch*q_heads, q_blocks, k_blocks), k innermost ("arbitrary"
+semantics) carrying the online-softmax state (m, l, acc) in VMEM scratch.
+Fully-masked k-blocks are skipped with @pl.when — for a window of W only
+ceil(W/bk)+1 k-blocks per q-block do work, which is what makes the SWA
+variant sub-quadratic on TPU.
+
+Target: TPU v5e (128x128 MXU tiles). Validated with interpret=True on CPU
+against kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int,
+                  softcap: float | None, num_kb: int, bq: int, bk: int):
+    i_q = pl.program_id(1)
+    i_k = pl.program_id(2)
+
+    @pl.when(i_k == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level relevance: skip k-blocks fully outside the mask
+    q_start = i_q * bq
+    k_start = i_k * bk
+    relevant = True
+    if causal:
+        relevant = k_start <= q_start + bq - 1
+    if window > 0:
+        # newest allowed key for the oldest query row: q_start - window + 1
+        relevant = jnp.logical_and(relevant, k_start + bk > q_start - window + 1)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)  # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot(p.astype(v.dtype), v))
+        m_ref[...] = m_new
+
+    @pl.when(i_k == num_kb - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         softcap: float | None = None,
+                         bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                         interpret: bool = True):
+    """q (B, H, S, hd); k/v (B, KV, S, hd) -> (B, H, S, hd).
+
+    S must be a multiple of the block sizes (ops.flash_attention pads).
+    """
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    assert h % kv == 0, (h, kv)
+    g = h // kv
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    num_qb, num_kb = s // bq, s // bk
+    scale = 1.0 / (hd ** 0.5)
+
+    qf = q.reshape(b * h, s, hd)
+    kf = k.reshape(b * kv, s, hd)
+    vf = v.reshape(b * kv, s, hd)
+
+    def q_map(i, j, t):
+        return (i, j, 0)
+
+    def kv_map(i, j, t):
+        bb = i // h
+        hh = i % h
+        return (bb * kv + hh // g, t, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, num_kb=num_kb, bq=bq, bk=bk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, num_qb, num_kb),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), q_map),
+            pl.BlockSpec((1, bk, hd), kv_map),
+            pl.BlockSpec((1, bk, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, hd), q.dtype),
+        scratch_shapes=[
+            # (m, l, acc) online-softmax carries, persist across the k grid
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+        if not interpret else None,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, hd)

@@ -1,0 +1,112 @@
+"""GPO neural-process attention Pallas kernel — the paper's hot spot.
+
+The preference predictor's mask is irregular for a causal flash kernel:
+  * context tokens (first m) attend to all context tokens,
+  * target tokens attend to context tokens AND themselves only.
+
+TPU-native design (DESIGN.md §4): block the (q, k) plane into MXU-aligned
+tiles; (target-q x target-k) tiles are *diagonal-only* — off-diagonal
+target-target tiles are skipped entirely with @pl.when, so the kernel does
+O(S*m + S) work instead of O(S^2) when targets dominate (the GPO regime:
+t >> m at evaluation).
+
+num_ctx is static (it is part of the training configuration, Eq. 1), so
+the block-relevance predicate folds at trace time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _gpo_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                scale: float, num_ctx: int, num_kb: int, bq: int, bk: int):
+    i_q = pl.program_id(1)
+    i_k = pl.program_id(2)
+
+    @pl.when(i_k == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start, k_start = i_q * bq, i_k * bk
+    # a (q, k) tile is relevant iff it contains context columns or touches
+    # the diagonal (target self-attention)
+    has_ctx_cols = k_start < num_ctx
+    touches_diag = jnp.logical_and(k_start < q_start + bq,
+                                   q_start < k_start + bk)
+    relevant = jnp.logical_or(has_ctx_cols, touches_diag)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        # neural-process mask: key is context, or key == query (self)
+        mask = jnp.logical_or(k_pos < num_ctx, k_pos == q_pos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot(p.astype(v.dtype), v))
+        m_ref[...] = m_new
+
+    @pl.when(i_k == num_kb - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def gpo_attention_hsd(q, k, v, *, num_ctx: int, bq: int = 128, bk: int = 128,
+                      interpret: bool = True):
+    """q, k, v (H, S, hd) -> (H, S, hd) with the neural-process mask.
+
+    S must be a multiple of the block sizes (ops.gpo_attention pads).
+    """
+    h, s, hd = q.shape
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    num_qb, num_kb = s // bq, s // bk
+    scale = 1.0 / (hd ** 0.5)
+
+    def idx(i, j, t):
+        return (i, j, 0)
+
+    def kv_idx(i, j, t):
+        return (i, t, 0)
+
+    kernel = functools.partial(_gpo_kernel, scale=scale, num_ctx=num_ctx,
+                               num_kb=num_kb, bq=bq, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(h, num_qb, num_kb),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), idx),
+            pl.BlockSpec((1, bk, hd), kv_idx),
+            pl.BlockSpec((1, bk, hd), kv_idx),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), idx),
+        out_shape=jax.ShapeDtypeStruct((h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+        if not interpret else None,
+    )(q, k, v)

@@ -1,0 +1,125 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle layout (model uses (B, S, H, hd); kernels use (B, H, S, hd)),
+padding to block multiples, and backend selection: on CPU the kernels run
+in interpret mode (the validation path); on TPU they lower natively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedavg_reduce import fedavg_reduce_flat
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.gpo_attention import gpo_attention_hsd
+from repro.kernels.ssd_scan import ssd_scan_bhsp
+from repro.utils.pytree import (
+    tree_flatten_to_vector,
+    tree_unflatten_from_vector,
+)
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_seq(x, block, axis):
+    pad = (-x.shape[axis]) % block
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float | None = None, bq: int = 128,
+                    bk: int = 128, interpret: bool | None = None):
+    """Model layout: q (B, S, H, hd), k/v (B, S, KV, hd) -> (B, S, H, hd)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    s_orig = q.shape[1]
+    bq = min(bq, max(16, s_orig))
+    bk = min(bk, max(16, s_orig))
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    qt, _ = _pad_seq(qt, bq, 2)
+    # pad K/V to the q-padded length so q/k grids agree
+    target = qt.shape[2]
+    kt = jnp.pad(kt, ((0, 0), (0, 0), (0, target - kt.shape[2]), (0, 0)))
+    vt = jnp.pad(vt, ((0, 0), (0, 0), (0, target - vt.shape[2]), (0, 0)))
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               softcap=softcap, bq=bq, bk=bk,
+                               interpret=interpret)
+    return out[:, :, :s_orig].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_ctx", "bq", "bk", "interpret"))
+def gpo_attention(q, k, v, *, num_ctx: int, bq: int = 128, bk: int = 128,
+                  interpret: bool | None = None):
+    """GPO layout: q/k/v (S, H, hd) -> (S, H, hd); neural-process mask.
+
+    Padding appends masked-out target rows (they only self-attend, so real
+    outputs are unaffected)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    s_orig = q.shape[0]
+    bq = min(bq, max(16, s_orig))
+    bk = min(bk, max(16, s_orig))
+    qt = q.transpose(1, 0, 2)
+    kt = k.transpose(1, 0, 2)
+    vt = v.transpose(1, 0, 2)
+    qt, _ = _pad_seq(qt, bq, 1)
+    target = qt.shape[1]
+    kt = jnp.pad(kt, ((0, 0), (0, target - kt.shape[1]), (0, 0)))
+    vt = jnp.pad(vt, ((0, 0), (0, target - vt.shape[1]), (0, 0)))
+    out = gpo_attention_hsd(qt, kt, vt, num_ctx=num_ctx, bq=bq, bk=bk,
+                            interpret=interpret)
+    return out[:, :s_orig].transpose(1, 0, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A_log, B, C, D, *, chunk: int = 128,
+             interpret: bool | None = None):
+    """Model layout (same as repro.models.ssm): x (b, s, h, p), dt (b, s, h),
+    B/C (b, s, n). Pads s to the chunk size with dt=0 (exact identity)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    s_orig = x.shape[1]
+    chunk = min(chunk, max(16, s_orig))
+    pad = (-s_orig) % chunk
+    if pad:
+        padf = lambda a: jnp.pad(  # noqa: E731
+            a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, B, C = padf(x), padf(dt), padf(B), padf(C)
+    y = ssd_scan_bhsp(x, dt, A_log, B, C, D, chunk=chunk,
+                      interpret=interpret)
+    return y[:, :s_orig]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fedavg_reduce(stacked, weights, *, block: int = 2048,
+                  interpret: bool | None = None):
+    """stacked (C, P) flattened client params, weights (C,) -> (P,)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return fedavg_reduce_flat(stacked, weights, block=block,
+                              interpret=interpret)
+
+
+def fedavg_reduce_tree(stacked_tree, weights, *, interpret: bool | None = None):
+    """Pytree convenience: stack clients' trees -> aggregated tree via the
+    Pallas reduction (Eq. 3)."""
+    num_clients = weights.shape[0]
+    like = jax.tree.map(lambda x: x[0], stacked_tree)
+    vecs = jnp.stack([
+        tree_flatten_to_vector(jax.tree.map(lambda x: x[c], stacked_tree))
+        for c in range(num_clients)])
+    avg = fedavg_reduce(vecs, weights, interpret=interpret)
+    return tree_unflatten_from_vector(avg, like)

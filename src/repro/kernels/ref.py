@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each oracle is the most *obviously correct* implementation (naive masked
+softmax; step-by-step recurrence), deliberately independent from the
+optimized model-code paths, so kernel tests triangulate three
+implementations: kernel == oracle == model path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_attention(q, k, v, *, causal=True, window=0, softcap=None):
+    """q (B,H,S,hd), k/v (B,KV,S,hd) -> (B,H,S,hd). Naive masked softmax."""
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, kk) / np.sqrt(hd)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (qpos - kpos < window)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(vv.dtype), vv)
+
+
+def ref_gpo_attention(q, k, v, *, num_ctx: int):
+    """q/k/v (H,S,hd) with the neural-process mask."""
+    h, s, hd = q.shape
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / np.sqrt(hd)
+    kpos = jnp.arange(s)[None, :]
+    qpos = jnp.arange(s)[:, None]
+    mask = (kpos < num_ctx) | (kpos == qpos)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs.astype(v.dtype), v)
+
+
+def ref_ssd(x, dt, A_log, B, C, D):
+    """Step-by-step SSD recurrence (the definition, O(S) sequential).
+
+    x (b,s,h,p); dt (b,s,h); A_log/D (h,); B/C (b,s,n) -> y like x.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    a = -jnp.exp(A_log.astype(jnp.float32))
+
+    def step(state, t):
+        xt = x[:, t].astype(jnp.float32)  # (b,h,p)
+        dtt = dt[:, t].astype(jnp.float32)  # (b,h)
+        bt = B[:, t].astype(jnp.float32)  # (b,n)
+        ct = C[:, t].astype(jnp.float32)
+        decay = jnp.exp(dtt * a[None, :])  # (b,h)
+        state = (decay[..., None, None] * state
+                 + jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt))
+        y = jnp.einsum("bhpn,bn->bhp", state, ct) + xt * D[None, :, None]
+        return state, y
+
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)  # (b,s,h,p)
+
+
+def ref_fedavg_flat(stacked, weights):
+    """stacked (C, P), weights (C,) -> (P,)."""
+    return jnp.einsum("c,cp->p", weights.astype(jnp.float32),
+                      stacked.astype(jnp.float32)).astype(stacked.dtype)

@@ -1,0 +1,122 @@
+"""Mamba2 SSD chunked-scan Pallas kernel.
+
+TPU adaptation of the CUDA chunked scan (DESIGN.md §4): the grid walks
+(batch*head, chunk) with the chunk dimension sequential; the running
+(P, N) state lives in VMEM scratch across chunk steps. Per chunk:
+
+  intra-chunk:  (L, L) masked decay x (C B^T) quadratic form -> MXU matmul
+  inter-chunk:  y += exp(cs) * C @ state^T;  state = exp(total)*state + X^T B
+
+No warp shuffles needed — the sequential dependency is exactly one VMEM
+tensor per (b, h) lane, and everything else is systolic matmul work.
+
+B/C are shared across heads (ngroups=1): their BlockSpecs index by batch
+only, so the kernel never duplicates them in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, alog_ref, d_ref, y_ref,
+                state_ref, *, chunk: int):
+    i_c = pl.program_id(1)
+
+    @pl.when(i_c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)  # (L, P)
+    dt = dt_ref[0].astype(jnp.float32)  # (L,)
+    bm = b_ref[0].astype(jnp.float32)  # (L, N)
+    cm = c_ref[0].astype(jnp.float32)  # (L, N)
+    a = -jnp.exp(alog_ref[0, 0].astype(jnp.float32))  # scalar
+    d = d_ref[0, 0].astype(jnp.float32)
+
+    dA = dt * a  # (L,)
+    cs = jnp.cumsum(dA)  # (L,)
+    # decay(i, j) = exp(cs_i - cs_j), lower-triangular
+    diff = cs[:, None] - cs[None, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    decay = jnp.where(tri, jnp.exp(diff), 0.0)
+
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())))  # (L, L)
+    scores = cb * decay * dt[None, :]
+    xdt = x * dt[:, None]
+
+    # scores already carries dt_j, so the matmul consumes plain x
+    y_intra = jax.lax.dot(scores, x)
+
+    state = state_ref[...]  # (P, N)
+    in_decay = jnp.exp(cs)  # (L,)
+    y_inter = in_decay[:, None] * jax.lax.dot_general(
+        cm, state, (((1,), (1,)), ((), ())))  # (L, P)
+
+    y = y_intra + y_inter + d * x
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    total = cs[-1]
+    decay_to_end = jnp.exp(total - cs)  # (L,)
+    # state' = exp(total) * state + sum_j decay_to_end_j * dt_j * x_j B_j^T
+    xw = xdt * decay_to_end[:, None]  # (L, P)
+    state_ref[...] = (jnp.exp(total) * state
+                      + jax.lax.dot_general(xw, bm, (((0,), (0,)), ((), ()))))
+
+
+def ssd_scan_bhsp(x, dt, A_log, B, C, D, *, chunk: int = 128,
+                  interpret: bool = True):
+    """x (b, s, h, p); dt (b, s, h); A_log/D (h,); B/C (b, s, n) -> y like x.
+
+    s must be a multiple of ``chunk`` (ops.ssd_scan pads with dt=0, which is
+    an exact identity for the recurrence).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    # lane layout: (b*h, s, p) for x/y; dt (b*h, s); B/C stay (b, s, n)
+    xf = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtf = dt.transpose(0, 2, 1).reshape(b * h, s)
+    alog = jnp.broadcast_to(A_log[None, :], (b, h)).reshape(b * h, 1)
+    df = jnp.broadcast_to(D[None, :], (b, h)).reshape(b * h, 1)
+
+    def x_map(i, c):
+        return (i, c, 0)
+
+    def dt_map(i, c):
+        return (i, c)
+
+    def bc_map(i, c):
+        return (i // h, c, 0)
+
+    def scalar_map(i, c):
+        return (i, 0)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), x_map),
+            pl.BlockSpec((1, chunk), dt_map),
+            pl.BlockSpec((1, chunk, n), bc_map),
+            pl.BlockSpec((1, chunk, n), bc_map),
+            pl.BlockSpec((1, 1), scalar_map),
+            pl.BlockSpec((1, 1), scalar_map),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), x_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+        if not interpret else None,
+    )(xf, dtf, B, C, alog, df)
+    return y.reshape(b, h, s, p).transpose(0, 2, 1, 3)

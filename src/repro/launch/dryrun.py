@@ -1,0 +1,194 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes WITHOUT allocating anything (params/batches/caches are
+ShapeDtypeStructs).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+      --shape train_4k [--multi-pod] [--out results.json]
+
+Per pair this prints/records:
+  * compiled.memory_analysis()  — proves the layout fits 16 GB/chip,
+  * compiled.cost_analysis()    — per-chip FLOPs / bytes for §Roofline,
+  * the collective schedule (op kind -> bytes) parsed from the HLO,
+  * the three roofline terms + bottleneck + MODEL_FLOPS/HLO_FLOPs ratio.
+
+The 2x16x16 multi-pod pass proves the 'pod' axis shards (hierarchical
+FedAvg / data parallelism over DCI); the roofline table is single-pod.
+"""  # noqa: E402
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_arch, override
+from repro.core.trainer import make_prefill_step, make_serve_step, make_train_step
+from repro.launch import roofline as rl
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch.sharding import (
+    adafactor_state_shardings,
+    adam_state_shardings,
+    batch_shardings,
+    cache_shardings,
+    params_shardings,
+)
+from repro.launch.specs import (
+    batch_specs,
+    cache_specs,
+    count_params,
+    input_specs,
+    params_specs,
+    serving_config,
+    train_settings,
+)
+from repro.models.partitioning import activation_sharding
+from repro.optim import adafactor, adam
+
+
+def _mem_stats(memory_analysis) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(memory_analysis, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+               fsdp_override: bool | None = None,
+               cfg_overrides: dict | None = None,
+               verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    num_chips = int(jnp.prod(jnp.asarray(list(mesh.shape.values()))))
+    shape = INPUT_SHAPES[shape_name]
+    cfg = override(get_arch(arch), param_dtype="bfloat16",
+                   activation_dtype="bfloat16")
+    cfg = serving_config(cfg, shape)
+    if cfg_overrides:
+        cfg = override(cfg, **cfg_overrides)
+    settings = train_settings(cfg)
+    fsdp = settings.fsdp if fsdp_override is None else fsdp_override
+    baxes = data_axes(mesh)
+
+    p_shapes = params_specs(cfg)
+    p_shard = params_shardings(p_shapes, cfg, mesh, fsdp=fsdp)
+
+    t0 = time.time()
+    ctx = activation_sharding(mesh)
+    ctx.__enter__()
+    if shape.kind == "train":
+        opt = adafactor(1e-3) if settings.optimizer == "adafactor" else adam(1e-3)
+        opt_shapes = jax.eval_shape(opt.init, p_shapes)
+        if settings.optimizer == "adafactor":
+            o_shard = adafactor_state_shardings(p_shard, p_shapes, mesh)
+        else:
+            o_shard = adam_state_shardings(p_shard, mesh)
+        b_shapes = batch_specs(cfg, shape, with_labels=True)
+        b_shard = batch_shardings(b_shapes, mesh, baxes)
+        step = make_train_step(cfg, opt, microbatch=settings.microbatch,
+                               remat=settings.remat)
+        jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(p_shapes, opt_shapes, b_shapes)
+    elif shape.kind == "prefill":
+        b_shapes = batch_specs(cfg, shape, with_labels=False)
+        b_shard = batch_shardings(b_shapes, mesh, baxes)
+        c_shapes = cache_specs(cfg, shape)
+        c_shard = cache_shardings(c_shapes, cfg, mesh, baxes)
+        step = make_prefill_step(cfg, shape.seq_len)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard),
+                         out_shardings=(None, c_shard))
+        lowered = jitted.lower(p_shapes, b_shapes)
+    else:  # decode
+        c_shapes = cache_specs(cfg, shape)
+        c_shard = cache_shardings(c_shapes, cfg, mesh, baxes)
+        tok_spec = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        tok_shard = batch_shardings({"tokens": tok_spec}, mesh, baxes)["tokens"]
+        pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+        pos_shard = NamedSharding(mesh, P())
+        step = make_serve_step(cfg)
+        jitted = jax.jit(step,
+                         in_shardings=(p_shard, c_shard, tok_shard, pos_shard),
+                         out_shardings=(None, c_shard),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(p_shapes, c_shapes, tok_spec, pos_spec)
+    ctx.__exit__(None, None, None)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    mflops = rl.model_flops(cfg, shape, num_chips)
+    roof = rl.analyze(cost, hlo, model_flops_per_chip=mflops)
+    xla_flops = float(cost.get("flops", 0.0))  # while-body-once cross-check
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(v) for v in mesh.shape.values()),
+        "multi_pod": multi_pod,
+        "num_chips": num_chips,
+        "params": count_params(cfg),
+        "fsdp": fsdp,
+        "kind": shape.kind,
+        "optimizer": settings.optimizer if shape.kind == "train" else None,
+        "microbatch": settings.microbatch if shape.kind == "train" else None,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": _mem_stats(mem),
+        "roofline": roof.as_dict(),
+        "xla_cost_flops": xla_flops,
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} mesh={result['mesh']} ==")
+        print("memory_analysis:", mem)
+        print("cost_analysis: flops=%.3e bytes=%.3e" % (
+            roof.flops_per_chip, roof.bytes_per_chip))
+        print("collectives:", roof.collectives.bytes_by_kind)
+        print("roofline: compute=%.2fms memory=%.2fms collective=%.2fms "
+              "-> %s | useful=%.2f" % (
+                  roof.compute_s * 1e3, roof.memory_s * 1e3,
+                  roof.collective_s * 1e3, roof.bottleneck,
+                  roof.useful_ratio))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None, help="append result as json line")
+    args = ap.parse_args()
+    try:
+        result = lower_pair(args.arch, args.shape, multi_pod=args.multi_pod)
+        status = "ok"
+    except Exception:
+        traceback.print_exc()
+        result = {"arch": args.arch, "shape": args.shape,
+                  "multi_pod": args.multi_pod, "error": traceback.format_exc()}
+        status = "error"
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(json.dumps(result) + "\n")
+    print(f"DRYRUN {status}: {args.arch} x {args.shape} "
+          f"multi_pod={args.multi_pod}")
+    if status == "error":
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

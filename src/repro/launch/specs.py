@@ -1,0 +1,124 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation), plus
+per-architecture dry-run training settings.
+
+``input_specs(cfg, shape)`` mirrors exactly what the real data pipeline /
+serving frontend produces:
+
+* token archs: {"tokens": (B, S) i32, "labels": (B, S) i32}
+* VLM (llava): the anyres ViT+projector frontend is a STUB — the spec is
+  pre-projected patch+text embeddings (B, S, d_model) bf16 (+ labels).
+* audio (whisper): the mel+conv frontend is a STUB — encoder frames
+  (B, 1500, d_model) bf16; decoder consumes tokens.
+* decode shapes: ONE new token (B, 1) + the pre-allocated cache specs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GLOBAL, InputShape, ModelConfig, override
+from repro.models import init_cache
+
+Sds = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class TrainSettings:
+    optimizer: str  # "adam" | "adafactor"
+    microbatch: int
+    remat: bool = True
+    fsdp: bool = True
+
+
+# chosen by parameter count (DESIGN.md §6): adafactor + deep microbatching
+# for the >=5B archs, adam for the small ones.
+# microbatch counts sized so the per-chip transient attention-score /
+# dispatch buffers stay O(few GB) at train_4k (memory_analysis-verified)
+ARCH_TRAIN_SETTINGS: dict[str, TrainSettings] = {
+    # grok: mb=4 adopted in §Perf iteration 3 (4x fewer FSDP weight
+    # re-gathers; activation headroom verified at 194 MB/chip)
+    "grok-1-314b": TrainSettings("adafactor", 4),
+    "llava-next-34b": TrainSettings("adafactor", 16),
+    "qwen3-32b": TrainSettings("adafactor", 16),
+    "gemma2-27b": TrainSettings("adafactor", 16),
+    "gemma3-27b": TrainSettings("adafactor", 16),
+    "granite-moe-3b-a800m": TrainSettings("adam", 8),
+    "zamba2-1.2b": TrainSettings("adam", 8),
+    "mamba2-780m": TrainSettings("adam", 1),
+    "whisper-small": TrainSettings("adam", 4),
+    "qwen2-0.5b": TrainSettings("adam", 8),
+}
+
+
+def train_settings(cfg: ModelConfig) -> TrainSettings:
+    return ARCH_TRAIN_SETTINGS.get(cfg.name, TrainSettings("adam", 1))
+
+
+def serving_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Apply the long-context serving variant where required.
+
+    Pure full-attention archs run long_500k only as the documented
+    sliding-window variant (DESIGN.md §5); gemma2/3, zamba2, mamba2 are
+    natively sub-quadratic and keep their published pattern.
+    """
+    if shape.name == "long_500k" and cfg.long_context_variant:
+        return override(cfg, window_pattern=(cfg.long_context_window,))
+    return cfg
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, *,
+                with_labels: bool) -> dict[str, Sds]:
+    b, s = shape.global_batch, shape.seq_len
+    adt = jnp.dtype(cfg.activation_dtype)
+    out: dict[str, Sds] = {}
+    if cfg.input_kind == "embeddings":
+        out["embeds"] = Sds((b, s, cfg.d_model), adt)
+    else:
+        out["tokens"] = Sds((b, s), jnp.int32)
+    if cfg.is_encoder_decoder:
+        out["enc_embeds"] = Sds((b, cfg.enc_seq_len, cfg.d_model), adt)
+    if with_labels:
+        out["labels"] = Sds((b, s), jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape) -> dict[str, Sds]:
+    """eval_shape of init_cache — no allocation."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape):
+    """(cache, tokens, cache_pos) specs for serve_step."""
+    cache = cache_specs(cfg, shape)
+    tokens = Sds((shape.global_batch, 1), jnp.int32)
+    pos = Sds((), jnp.int32)
+    return cache, tokens, pos
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    from repro.models import init_params
+
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Every model input for the given workload shape, as
+    ShapeDtypeStructs (weak-type-correct, shardable, zero allocation)."""
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape, with_labels=False)}
+    cache, tokens, pos = decode_specs(cfg, shape)
+    return {"cache": cache, "tokens": tokens, "cache_pos": pos}
+
+
+def count_params(cfg: ModelConfig) -> int:
+    import numpy as np
+
+    shapes = params_specs(cfg)
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(shapes)))

@@ -1,0 +1,138 @@
+"""Training launcher.
+
+Three trainer modes, all runnable on CPU with --smoke (reduced configs):
+
+  standard  — plain LM training of the selected architecture.
+  fedavg    — the paper's technique on the backbone: C clients run local
+              LM steps on disjoint data shards; rounds end with Eq. 3
+              weighted parameter averaging.
+  fedlora   — frozen backbone, federated LoRA adapters (the large-arch
+              recipe).
+  gpo       — the paper's own experiment: federated GPO preference
+              predictor on synthetic survey data (see benchmarks/ for the
+              full figure reproduction).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+      --trainer fedavg --rounds 3 --local-steps 2
+  PYTHONPATH=src python -m repro.launch.train --trainer gpo --rounds 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import (
+    FedConfig,
+    GPOConfig,
+    INPUT_SHAPES,
+    get_arch,
+    smoke_variant,
+)
+from repro.core import (
+    FederatedGPO,
+    broadcast_to_clients,
+    init_lora,
+    make_backbone_fedavg_round,
+    make_fedlora_round,
+    make_train_step,
+    normalize_weights,
+)
+from repro.data import LMDataConfig, make_survey_data, SurveyConfig, split_groups
+from repro.data.lm_data import synthetic_lm_batches
+from repro.models import init_params
+from repro.optim import adam
+
+
+def _stack_client_batches(it, clients: int, steps: int):
+    batches = [[next(it) for _ in range(steps)] for _ in range(clients)]
+    per_client = [
+        jax.tree.map(lambda *xs: jnp.stack(xs), *bs) for bs in batches]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--trainer", default="standard",
+                    choices=["standard", "fedavg", "fedlora", "gpo"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if args.trainer == "gpo":
+        data = make_survey_data(SurveyConfig(seed=args.seed))
+        tr, ev = split_groups(data, seed=args.seed)
+        gcfg = GPOConfig(d_embed=data.phi.shape[-1])
+        fcfg = FedConfig(num_clients=len(tr), rounds=args.rounds,
+                         seed=args.seed)
+        fed = FederatedGPO(gcfg, fcfg, data, tr, ev)
+        hist = fed.run(rounds=args.rounds, log_every=10)
+        print(f"final loss={hist.round_loss[-1]:.4f} "
+              f"AS={hist.eval_mean_as[-1]:.4f} FI={hist.eval_fi[-1]:.4f}")
+        if args.ckpt_dir:
+            save_checkpoint(args.ckpt_dir, args.rounds, fed.global_params)
+        return
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    opt = adam(args.lr)
+    data_cfg = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                            global_batch=args.batch, seed=args.seed)
+    it = synthetic_lm_batches(data_cfg)
+
+    if args.trainer == "standard":
+        step = jax.jit(make_train_step(cfg, opt))
+        opt_state = opt.init(params)
+        t0 = time.time()
+        for i in range(args.steps):
+            params, opt_state, m = step(params, opt_state, next(it))
+            if i % max(1, args.steps // 10) == 0:
+                print(f"step {i:4d} loss={float(m['loss']):.4f}")
+        print(f"done: {args.steps} steps in {time.time()-t0:.1f}s "
+              f"final loss={float(m['loss']):.4f}")
+    else:
+        c = args.clients
+        weights = normalize_weights(jnp.ones((c,)))
+        if args.trainer == "fedavg":
+            client_params = broadcast_to_clients(params, c)
+            opt_states = jax.vmap(opt.init)(client_params)
+            rnd = jax.jit(make_backbone_fedavg_round(cfg, opt,
+                                                     args.local_steps))
+        else:
+            lora = init_lora(params, key, rank=8)
+            client_params = broadcast_to_clients(lora, c)
+            opt_states = jax.vmap(opt.init)(client_params)
+            rnd = jax.jit(make_fedlora_round(cfg, params, opt,
+                                             args.local_steps))
+        for r in range(args.rounds):
+            batches = _stack_client_batches(it, c, args.local_steps)
+            client_params, opt_states, losses = rnd(
+                client_params, opt_states, batches, weights)
+            print(f"round {r:3d} client losses="
+                  f"{np.round(np.asarray(losses), 4)}")
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps,
+                        params if args.trainer == "standard"
+                        else client_params)
+
+
+if __name__ == "__main__":
+    main()

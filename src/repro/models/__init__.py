@@ -1,0 +1,6 @@
+from repro.models.transformer import (  # noqa: F401
+    init_params,
+    forward,
+    init_cache,
+    hidden_states,
+)

@@ -1,0 +1,70 @@
+"""Primitive layers shared by every backbone."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (LeCun)."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = 1.0 / jnp.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    normed = x * jax.lax.rsqrt(var + eps)
+    # (1 + scale) parameterization (gemma/llama style, init scale = 0)
+    return (normed * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap) -> jnp.ndarray:
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta) -> jnp.ndarray:
+    """Rotary embedding.
+
+    x: (..., S, H, hd) — positions: broadcastable to (..., S).
+    ``theta`` may be a traced scalar (per-layer theta rides the layer scan in
+    gemma3).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freq_exponents = jnp.arange(half, dtype=jnp.float32) / half
+    inv_freq = jnp.asarray(theta, jnp.float32) ** (-freq_exponents)  # (half,)
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., S, half)
+    sin = jnp.sin(angles)[..., None, :]  # (..., S, 1, half)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    from repro.models.partitioning import shard_act
+
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u
+    if h.ndim == 3:
+        h = shard_act(h, ("batch", "seq", "ff"))
+    out = jnp.einsum("...f,fd->...d", h, w_down)
+    if out.ndim == 3:
+        out = shard_act(out, ("batch", "seq", "embed"))
+    return out
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       final_softcap=None) -> jnp.ndarray:
+    """Mean next-token NLL. logits (B, S, V) any float dtype; labels (B, S)."""
+    logits = logits.astype(jnp.float32)
+    if final_softcap is not None:
+        logits = softcap(logits, final_softcap)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,13 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adafactor,
+    adam,
+    adamw,
+    sgd,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant_schedule,
+    cosine_schedule,
+    linear_warmup_cosine,
+)

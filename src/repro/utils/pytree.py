@@ -1,0 +1,119 @@
+"""Pytree helpers used across the framework.
+
+These are deliberately dependency-free (pure jax) so every layer —
+optimizers, FedAvg aggregation, checkpointing — shares one vocabulary for
+manipulating parameter trees.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_weighted_sum(trees: list[PyTree], weights) -> PyTree:
+    """sum_i weights[i] * trees[i]  — the FedAvg primitive (host-side form)."""
+    weights = jnp.asarray(weights)
+    acc = tree_scale(trees[0], weights[0])
+    for w, t in zip(weights[1:], trees[1:]):
+        acc = tree_axpy(w, t, acc)
+    return acc
+
+
+def tree_dot(a: PyTree, b: PyTree):
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree.reduce(jnp.add, leaves)
+
+
+def tree_sq_norm(tree: PyTree):
+    leaves = jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), tree)
+    return jax.tree.reduce(jnp.add, leaves)
+
+
+def tree_global_norm(tree: PyTree):
+    return jnp.sqrt(tree_sq_norm(tree))
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_count_params(tree: PyTree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def tree_map_with_path(fn: Callable, tree: PyTree) -> PyTree:
+    """fn(path_string, leaf) -> leaf."""
+
+    def _fn(path, leaf):
+        return fn(jax.tree_util.keystr(path), leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)
+
+
+def tree_any_nan(tree: PyTree):
+    leaves = jax.tree.map(lambda x: jnp.any(jnp.isnan(x)), tree)
+    return jax.tree.reduce(jnp.logical_or, leaves)
+
+
+def tree_stack(trees: list[PyTree]) -> PyTree:
+    """Stack a list of identically-structured trees along a new leading axis.
+
+    Used to stack per-client parameter sets onto the client axis and
+    per-layer parameters for ``lax.scan`` over depth.
+    """
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree: PyTree, n: int) -> list[PyTree]:
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+def tree_index(tree: PyTree, i) -> PyTree:
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def tree_flatten_to_vector(tree: PyTree) -> jnp.ndarray:
+    """Concatenate every leaf (f32) into one flat vector. Used by the
+    ``fedavg_reduce`` kernel path and by property tests."""
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([jnp.ravel(x).astype(jnp.float32) for x in leaves])
+
+
+def tree_unflatten_from_vector(vec: jnp.ndarray, like: PyTree) -> PyTree:
+    leaves, treedef = jax.tree.flatten(like)
+    out, off = [], 0
+    for leaf in leaves:
+        size = int(np.prod(leaf.shape))
+        out.append(vec[off : off + size].reshape(leaf.shape).astype(leaf.dtype))
+        off += size
+    return jax.tree.unflatten(treedef, out)

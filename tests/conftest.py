@@ -1,0 +1,16 @@
+import os
+
+# Tests must see the single real CPU device (the 512-device override is
+# strictly dryrun.py's); keep any preset XLA_FLAGS out of the test env.
+os.environ.pop("XLA_FLAGS", None)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,52 @@
+"""Checkpoint roundtrip tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
+from repro.optim import adam
+
+
+def test_roundtrip(tmp_path, rng):
+    tree = {"layer": {"w": jax.random.normal(rng, (4, 3)),
+                      "b": jnp.zeros((3,), jnp.bfloat16)},
+            "step": jnp.asarray(7, jnp.int32)}
+    path = save_checkpoint(str(tmp_path), 7, tree, metadata={"loss": 1.0})
+    restored = restore_checkpoint(path, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_latest(tmp_path, rng):
+    tree = {"w": jnp.ones((2,))}
+    save_checkpoint(str(tmp_path), 3, tree)
+    save_checkpoint(str(tmp_path), 12, tree)
+    save_checkpoint(str(tmp_path), 7, tree)
+    assert latest_checkpoint(str(tmp_path)).endswith("ckpt_00000012.npz")
+    assert latest_checkpoint(str(tmp_path / "missing")) is None
+
+
+def test_shape_mismatch_raises(tmp_path, rng):
+    path = save_checkpoint(str(tmp_path), 0, {"w": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(path, {"w": jnp.zeros((3, 3))})
+    with pytest.raises(KeyError):
+        restore_checkpoint(path, {"other": jnp.zeros((2, 2))})
+
+
+def test_optimizer_state_roundtrip(tmp_path, rng):
+    params = {"w": jax.random.normal(rng, (5, 5))}
+    opt = adam(1e-3)
+    state = opt.init(params)
+    grads = jax.tree.map(jnp.ones_like, params)
+    params2, state2 = opt.update(grads, state, params)
+    path = save_checkpoint(str(tmp_path), 1,
+                           {"params": params2, "opt": state2})
+    like = {"params": jax.tree.map(jnp.zeros_like, params2),
+            "opt": opt.init(params)}
+    restored = restore_checkpoint(path, like)
+    np.testing.assert_array_equal(np.asarray(restored["opt"].mu["w"]),
+                                  np.asarray(state2.mu["w"]))

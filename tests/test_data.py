@@ -1,0 +1,89 @@
+"""Data pipeline tests: surveys, embeddings, LM batches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import (
+    LMDataConfig,
+    StubEmbedder,
+    SurveyConfig,
+    make_survey_data,
+    sample_icl_batch,
+    split_groups,
+    synthetic_lm_batches,
+)
+
+
+def test_survey_structure():
+    cfg = SurveyConfig(num_groups=12, num_questions=50, num_options=5,
+                       d_embed=32, seed=7)
+    data = make_survey_data(cfg)
+    assert data.prefs.shape == (12, 50, 5)
+    np.testing.assert_allclose(np.asarray(data.prefs.sum(-1)),
+                               np.ones((12, 50)), rtol=1e-5)
+    assert data.phi.shape == (50, 5, 32)
+    assert bool(jnp.all(data.sizes >= 8))
+    # determinism
+    data2 = make_survey_data(cfg)
+    np.testing.assert_array_equal(np.asarray(data.prefs),
+                                  np.asarray(data2.prefs))
+
+
+def test_group_split_disjoint():
+    data = make_survey_data(SurveyConfig(num_groups=17))
+    tr, ev = split_groups(data, train_frac=0.6, seed=0)
+    assert len(tr) == 10 and len(ev) == 7
+    assert set(tr).isdisjoint(ev)
+    assert set(tr) | set(ev) == set(range(17))
+
+
+def test_icl_batch_shapes_and_options():
+    data = make_survey_data(SurveyConfig(num_questions=60, d_embed=16))
+    b = sample_icl_batch(jax.random.PRNGKey(0), data, group=2,
+                         num_context=8, num_target=4)
+    a = data.num_options
+    assert b.ctx_x.shape == (8 * a, 16)
+    assert b.tgt_y.shape == (4 * a,)
+    # each context question's options sum to 1
+    np.testing.assert_allclose(
+        np.asarray(b.ctx_y.reshape(8, a).sum(-1)), np.ones(8), rtol=1e-5)
+    # target question ids repeat per option
+    qids = np.asarray(b.tgt_q.reshape(4, a))
+    assert (qids == qids[:, :1]).all()
+
+
+def test_icl_sampling_respects_group_mask():
+    data = make_survey_data(SurveyConfig(num_questions=40, seed=3))
+    g = 1
+    answered = set(np.nonzero(np.asarray(data.mask[g]))[0].tolist())
+    for s in range(5):
+        b = sample_icl_batch(jax.random.PRNGKey(s), data, group=g,
+                             num_context=6, num_target=6)
+        qs = set(np.asarray(b.tgt_q).tolist())
+        assert qs <= answered
+
+
+def test_stub_embedder_deterministic_unit_norm():
+    e = StubEmbedder(d_embed=24, seed=1)
+    v1 = e.embed_qa("q1", "a1")
+    v2 = e.embed_qa("q1", "a1")
+    v3 = e.embed_qa("q1", "a2")
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2))
+    assert not np.allclose(np.asarray(v1), np.asarray(v3))
+    np.testing.assert_allclose(float(jnp.linalg.norm(v1)), 1.0, rtol=1e-5)
+
+
+def test_lm_batches_shapes_and_shift():
+    cfg = LMDataConfig(vocab_size=128, seq_len=16, global_batch=4, seed=0)
+    it = synthetic_lm_batches(cfg)
+    b1 = next(it)
+    assert b1["tokens"].shape == (4, 16)
+    assert b1["labels"].shape == (4, 16)
+    # labels are next tokens
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),
+                                  np.asarray(b1["labels"][:, :-1]))
+    assert int(b1["tokens"].max()) < 128
+    # deterministic restart
+    b1b = next(synthetic_lm_batches(cfg))
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b1b["tokens"]))

@@ -1,0 +1,61 @@
+"""Alignment / fairness metric unit tests (paper Eqs. 4-6)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fairness import (
+    alignment_score,
+    coefficient_of_variation,
+    convergence_round,
+    fairness_index,
+    js_distance,
+)
+
+
+def test_jsd_identical_is_zero():
+    p = jnp.array([[0.2, 0.3, 0.5]])
+    assert float(js_distance(p, p)[0]) < 1e-6
+
+
+def test_jsd_disjoint_is_one():
+    p = jnp.array([[1.0, 0.0]])
+    q = jnp.array([[0.0, 1.0]])
+    assert abs(float(js_distance(p, q)[0]) - 1.0) < 1e-3
+
+
+def test_jsd_symmetry():
+    p = jnp.array([[0.7, 0.2, 0.1]])
+    q = jnp.array([[0.1, 0.1, 0.8]])
+    assert abs(float(js_distance(p, q)[0]) -
+               float(js_distance(q, p)[0])) < 1e-7
+
+
+def test_alignment_score_range_and_perfect():
+    p = jnp.array([[0.2, 0.8], [0.6, 0.4]])
+    assert abs(float(alignment_score(p, p)) - 1.0) < 1e-6
+    q = jnp.array([[0.8, 0.2], [0.4, 0.6]])
+    s = float(alignment_score(p, q))
+    assert 0.0 <= s <= 1.0
+
+
+def test_cov_and_fi_known_values():
+    equal = jnp.array([0.5, 0.5, 0.5])
+    assert float(coefficient_of_variation(equal)) < 1e-7
+    assert abs(float(fairness_index(equal)) - 1.0) < 1e-6
+    scores = jnp.array([0.2, 0.4, 0.6])
+    mu, sigma = 0.4, np.sqrt(((0.2 - 0.4) ** 2 + 0 + (0.6 - 0.4) ** 2) / 3)
+    cov = sigma / mu
+    np.testing.assert_allclose(float(coefficient_of_variation(scores)),
+                               cov, rtol=1e-5)
+    np.testing.assert_allclose(float(fairness_index(scores)),
+                               1.0 / (1.0 + cov ** 2), rtol=1e-5)
+
+
+def test_convergence_round_95pct():
+    # descent from 1.0 to 0.0: 95% of descent reached at value 0.05
+    losses = np.linspace(1.0, 0.0, 101)
+    r = convergence_round(losses, frac=0.95)
+    assert r == 95
+    # non-monotone tail: threshold = 1.0 - 0.95*(1.0-0.04) = 0.088,
+    # first value <= 0.088 is index 3 (0.06)
+    losses2 = np.array([1.0, 0.5, 0.2, 0.06, 0.04, 0.05, 0.04])
+    assert convergence_round(losses2) == 3

@@ -1,0 +1,125 @@
+"""GPO preference-predictor invariants (paper §3.1 / GPO)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import GPOConfig
+from repro.core import gpo_apply, gpo_loss, init_gpo_params, predict_preferences
+from repro.optim import adam
+
+CFG = GPOConfig(d_embed=16, d_model=32, num_layers=2, num_heads=4, d_ff=64)
+
+
+def _data(key, m=6, t=10):
+    kx, ky, kt = jax.random.split(key, 3)
+    ctx_x = jax.random.normal(kx, (m, CFG.d_embed))
+    ctx_y = jax.random.uniform(ky, (m,))
+    tgt_x = jax.random.normal(kt, (t, CFG.d_embed))
+    return ctx_x, ctx_y, tgt_x
+
+
+def test_output_shape():
+    key = jax.random.PRNGKey(0)
+    params = init_gpo_params(CFG, key)
+    ctx_x, ctx_y, tgt_x = _data(key)
+    mu, log_sigma = gpo_apply(params, CFG, ctx_x, ctx_y, tgt_x)
+    assert mu.shape == (10,)
+    assert log_sigma is None
+
+
+def test_target_conditional_independence():
+    """Eq. 1: target i's prediction may not depend on target j != i —
+    the neural-process mask must prevent cross-target leakage."""
+    key = jax.random.PRNGKey(1)
+    params = init_gpo_params(CFG, key)
+    ctx_x, ctx_y, tgt_x = _data(key)
+    mu1, _ = gpo_apply(params, CFG, ctx_x, ctx_y, tgt_x)
+    tgt_x2 = tgt_x.at[3].set(jax.random.normal(jax.random.fold_in(key, 9),
+                                               (CFG.d_embed,)))
+    mu2, _ = gpo_apply(params, CFG, ctx_x, ctx_y, tgt_x2)
+    others = jnp.delete(jnp.arange(10), 3)
+    np.testing.assert_allclose(np.asarray(mu1[others]),
+                               np.asarray(mu2[others]), rtol=1e-5, atol=1e-6)
+    assert not np.allclose(float(mu1[3]), float(mu2[3]))
+
+
+def test_context_permutation_invariance():
+    """No positional encoding: the context is a SET."""
+    key = jax.random.PRNGKey(2)
+    params = init_gpo_params(CFG, key)
+    ctx_x, ctx_y, tgt_x = _data(key)
+    mu1, _ = gpo_apply(params, CFG, ctx_x, ctx_y, tgt_x)
+    perm = jax.random.permutation(jax.random.fold_in(key, 3), 6)
+    mu2, _ = gpo_apply(params, CFG, ctx_x[perm], ctx_y[perm], tgt_x)
+    np.testing.assert_allclose(np.asarray(mu1), np.asarray(mu2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_loss_decreases_with_training():
+    key = jax.random.PRNGKey(3)
+    params = init_gpo_params(CFG, key)
+    # learnable synthetic mapping y = sigmoid(<w, x>)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (CFG.d_embed,))
+
+    def batch(k):
+        x = jax.random.normal(k, (20, CFG.d_embed))
+        y = jax.nn.sigmoid(x @ w)
+        return x[:8], y[:8], x[8:], y[8:]
+
+    opt = adam(3e-3)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, k):
+        cx, cy, tx, ty = batch(k)
+        loss, grads = jax.value_and_grad(gpo_loss)(params, CFG, cx, cy,
+                                                   tx, ty)
+        params, state = opt.update(grads, state, params)
+        return params, state, loss
+
+    losses = []
+    for i in range(60):
+        params, state, loss = step(params, state,
+                                   jax.random.fold_in(key, 100 + i))
+        losses.append(float(loss))
+    assert np.mean(losses[-10:]) < 0.5 * np.mean(losses[:10])
+
+
+def test_predict_preferences_simplex():
+    key = jax.random.PRNGKey(4)
+    params = init_gpo_params(CFG, key)
+    ctx_x, ctx_y, _ = _data(key)
+    tgt_x = jax.random.normal(key, (3 * 5, CFG.d_embed))
+    pred = predict_preferences(params, CFG, ctx_x, ctx_y, tgt_x,
+                               num_options=5)
+    assert pred.shape == (3, 5)
+    np.testing.assert_allclose(np.asarray(pred.sum(-1)), np.ones(3),
+                               rtol=1e-5)
+    assert bool(jnp.all(pred >= 0))
+
+
+def test_pallas_attention_path_matches_jnp():
+    """Serving with the Pallas neural-process kernel == jnp path."""
+    import dataclasses
+
+    key = jax.random.PRNGKey(6)
+    params = init_gpo_params(CFG, key)
+    ctx_x, ctx_y, tgt_x = _data(key, m=6, t=10)
+    mu_ref, _ = gpo_apply(params, CFG, ctx_x, ctx_y, tgt_x)
+    cfg_k = dataclasses.replace(CFG, use_pallas_attention=True)
+    mu_ker, _ = gpo_apply(params, cfg_k, ctx_x, ctx_y, tgt_x)
+    np.testing.assert_allclose(np.asarray(mu_ref), np.asarray(mu_ker),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_learned_sigma_head():
+    cfg = GPOConfig(d_embed=16, d_model=32, num_layers=1, num_heads=2,
+                    d_ff=32, learn_sigma=True)
+    key = jax.random.PRNGKey(5)
+    params = init_gpo_params(cfg, key)
+    ctx_x, ctx_y, tgt_x = _data(key)
+    mu, log_sigma = gpo_apply(params, cfg, ctx_x, ctx_y, tgt_x)
+    assert log_sigma is not None and log_sigma.shape == mu.shape
+    loss = gpo_loss(params, cfg, ctx_x, ctx_y, tgt_x,
+                    jnp.zeros_like(mu))
+    assert jnp.isfinite(loss)

@@ -1,0 +1,159 @@
+"""Per-kernel allclose tests: shape/dtype sweeps against the ref.py
+pure-jnp oracles (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (
+    fedavg_reduce,
+    fedavg_reduce_tree,
+    flash_attention,
+    gpo_attention,
+    ssd_scan,
+)
+from repro.kernels.ref import (
+    ref_attention,
+    ref_fedavg_flat,
+    ref_gpo_attention,
+    ref_ssd,
+)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("s", [64, 100, 257])
+@pytest.mark.parametrize("h,kv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(s, h, kv, dtype):
+    key = jax.random.PRNGKey(0)
+    b, hd = 2, 64
+    q = jax.random.normal(key, (b, s, h, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    ref = ref_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [1, 7, 64])
+@pytest.mark.parametrize("softcap", [None, 20.0])
+def test_flash_attention_window_softcap(window, softcap):
+    key = jax.random.PRNGKey(3)
+    b, s, h, kv, hd = 1, 128, 4, 2, 64
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, hd))
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          softcap=softcap, bq=32, bk=32)
+    ref = ref_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, window=window,
+        softcap=softcap).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("s,m", [(64, 16), (100, 20), (48, 40)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gpo_attention_sweep(s, m, dtype):
+    key = jax.random.PRNGKey(1)
+    h, hd = 4, 32
+    q = jax.random.normal(key, (s, h, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (s, h, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (s, h, hd), dtype)
+    out = gpo_attention(q, k, v, num_ctx=m, bq=16, bk=16)
+    ref = ref_gpo_attention(
+        q.transpose(1, 0, 2), k.transpose(1, 0, 2),
+        v.transpose(1, 0, 2), num_ctx=m).transpose(1, 0, 2)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_gpo_attention_matches_module_mask():
+    """The kernel's mask must equal core.gpo._np_mask semantics."""
+    from repro.core.gpo import _np_mask
+
+    m, t = 8, 24
+    mask = np.asarray(_np_mask(m, t))
+    # kernel semantics: key < m or key == query
+    s = m + t
+    expected = (np.arange(s)[None, :] < m) | np.eye(s, dtype=bool)
+    np.testing.assert_array_equal(mask, expected)
+
+
+@pytest.mark.parametrize("s,chunk", [(64, 16), (75, 16), (128, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(s, chunk, dtype):
+    key = jax.random.PRNGKey(2)
+    b, h, p, n = 2, 3, 16, 8
+    x = (jax.random.normal(key, (b, s, h, p)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(
+        jax.random.normal(jax.random.fold_in(key, 5), (b, s, h)))
+    A_log = jax.random.normal(jax.random.fold_in(key, 6), (h,)) * 0.5
+    B = (jax.random.normal(jax.random.fold_in(key, 7), (b, s, n)) * 0.5
+         ).astype(dtype)
+    C = (jax.random.normal(jax.random.fold_in(key, 8), (b, s, n)) * 0.5
+         ).astype(dtype)
+    D = jax.random.normal(jax.random.fold_in(key, 9), (h,))
+    y = ssd_scan(x, dt, A_log, B, C, D, chunk=chunk)
+    yr = ref_ssd(x, dt, A_log, B, C, D)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_ssd_kernel_matches_model_path():
+    """kernel == model ssd_chunked == step-by-step ref (triangulation)."""
+    from repro.models.ssm import ssd_chunked
+
+    key = jax.random.PRNGKey(4)
+    b, s, h, p, n = 1, 48, 2, 8, 4
+    x = jax.random.normal(key, (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (b, s, h)))
+    A_log = jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.5
+    B = jax.random.normal(jax.random.fold_in(key, 3), (b, s, n)) * 0.5
+    C = jax.random.normal(jax.random.fold_in(key, 4), (b, s, n)) * 0.5
+    D = jnp.ones((h,))
+    y_kernel = ssd_scan(x, dt, A_log, B, C, D, chunk=16)
+    y_model, _ = ssd_chunked(x, dt, A_log, B, C, D, chunk=16)
+    y_ref = ref_ssd(x, dt, A_log, B, C, D)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_model),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_model), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("c,p", [(2, 100), (5, 10001), (16, 4096)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_reduce_sweep(c, p, dtype):
+    key = jax.random.PRNGKey(5)
+    stacked = jax.random.normal(key, (c, p), dtype)
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (c,)))
+    out = fedavg_reduce(stacked, w)
+    ref = ref_fedavg_flat(stacked, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_fedavg_reduce_tree_matches_stacked():
+    from repro.core import fedavg_stacked
+
+    key = jax.random.PRNGKey(6)
+    tree = {"a": jax.random.normal(key, (3, 8, 4)),
+            "b": {"c": jax.random.normal(jax.random.fold_in(key, 1),
+                                         (3, 5))}}
+    w = jnp.array([0.5, 0.3, 0.2])
+    out = fedavg_reduce_tree(tree, w)
+    ref = fedavg_stacked(tree, w)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,151 @@
+"""Model-layer unit tests: rope, masks, moe, ssd, conv."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import make_causal_window_mask
+from repro.models.layers import rms_norm, rope, softcap
+from repro.models.moe import expert_capacity, moe_ffn, init_moe_params
+from repro.models.ssm import causal_depthwise_conv, ssd_chunked
+from repro.kernels.ref import ref_ssd
+
+
+def test_rope_preserves_norm_and_relative_positions(rng):
+    b, s, h, hd = 1, 8, 2, 32
+    x = jax.random.normal(rng, (b, s, h, hd))
+    pos = jnp.arange(s)[None, :].repeat(b, 0)
+    y = rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(x, axis=-1)),
+        np.asarray(jnp.linalg.norm(y, axis=-1)), rtol=1e-4)
+    # inner products depend only on relative offsets
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.fold_in(rng, 2), (1, 1, 1, hd))
+    def dot_at(pq, pk):
+        qr = rope(q, jnp.array([[pq]]), 10_000.0)
+        kr = rope(k, jnp.array([[pk]]), 10_000.0)
+        return float(jnp.sum(qr * kr))
+    np.testing.assert_allclose(dot_at(5, 3), dot_at(9, 7), rtol=1e-4)
+
+
+def test_rms_norm_unit_scale():
+    x = jnp.array([[3.0, 4.0]])
+    y = rms_norm(x, jnp.zeros(2))
+    np.testing.assert_allclose(
+        float(jnp.sqrt(jnp.mean(jnp.square(y)))), 1.0, rtol=1e-4)
+
+
+def test_causal_window_mask():
+    pos = jnp.arange(6)[None, :]
+    m_global = make_causal_window_mask(pos, pos, 0)  # 0 == global
+    assert bool(m_global[0, 5, 0]) and not bool(m_global[0, 0, 5])
+    m_win = make_causal_window_mask(pos, pos, 2)
+    # window 2: attend self and previous only
+    assert bool(m_win[0, 3, 3]) and bool(m_win[0, 3, 2])
+    assert not bool(m_win[0, 3, 1])
+
+
+def test_expert_capacity_alignment():
+    c = expert_capacity(1024, 8, 2, 1.25)
+    assert c % 8 == 0 and c >= 1024 * 2 / 8
+
+
+def test_moe_load_is_conserved(rng):
+    """With drop-free capacity, combine weights per token sum to 1 and the
+    layer output is a convex mix of expert outputs (checked via linearity
+    against manual dense routing)."""
+    from repro.configs import get_arch, smoke_variant
+
+    cfg = smoke_variant(get_arch("grok-1-314b"))
+    p = init_moe_params(rng, cfg, jnp.float32)
+    x = jax.random.normal(rng, (2, 8, cfg.d_model))
+    out, aux = moe_ffn(p, x, cfg.num_experts, cfg.experts_per_token,
+                       capacity_factor=8.0)
+    # manual dense: route every token through all experts, mix by topk probs
+    xf = x.reshape(-1, cfg.d_model)
+    logits = xf @ p.router
+    probs = jax.nn.softmax(logits, -1)
+    topk_p, topk_i = jax.lax.top_k(probs, cfg.experts_per_token)
+    topk_p = topk_p / topk_p.sum(-1, keepdims=True)
+    g = jnp.einsum("td,edf->tef", xf, p.w_gate)
+    u = jnp.einsum("td,edf->tef", xf, p.w_up)
+    h = jax.nn.silu(g) * u
+    all_out = jnp.einsum("tef,efd->ted", h, p.w_down)
+    mix = jnp.take_along_axis(all_out, topk_i[..., None], axis=1)
+    manual = (mix * topk_p[..., None]).sum(1).reshape(x.shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(manual),
+                               rtol=1e-3, atol=1e-4)
+    assert float(aux) > 0
+
+
+def test_conv_causality(rng):
+    b, s, c = 1, 10, 4
+    x = jax.random.normal(rng, (b, s, c))
+    w = jax.random.normal(jax.random.fold_in(rng, 1), (4, c))
+    bias = jnp.zeros((c,))
+    y1, _ = causal_depthwise_conv(x, w, bias)
+    x2 = x.at[:, 7].set(99.0)  # perturb the future
+    y2, _ = causal_depthwise_conv(x2, w, bias)
+    np.testing.assert_allclose(np.asarray(y1[:, :7]), np.asarray(y2[:, :7]),
+                               rtol=1e-5)
+    assert not np.allclose(np.asarray(y1[:, 7:]), np.asarray(y2[:, 7:]))
+
+
+def test_conv_streaming_matches_full(rng):
+    """Decode-time conv with state == full-sequence conv."""
+    b, s, c, w_len = 1, 12, 3, 4
+    x = jax.random.normal(rng, (b, s, c))
+    w = jax.random.normal(jax.random.fold_in(rng, 1), (w_len, c))
+    bias = jax.random.normal(jax.random.fold_in(rng, 2), (c,))
+    full, _ = causal_depthwise_conv(x, w, bias)
+    state = jnp.zeros((b, w_len - 1, c))
+    outs = []
+    for t in range(s):
+        y, state = causal_depthwise_conv(x[:, t:t + 1], w, bias, state=state)
+        outs.append(y)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(stream),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_ssd_chunk_size_invariance(rng, chunk):
+    b, s, h, p, n = 1, 64, 2, 8, 4
+    x = jax.random.normal(rng, (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(rng, 1),
+                                           (b, s, h)))
+    A_log = jax.random.normal(jax.random.fold_in(rng, 2), (h,)) * 0.5
+    B = jax.random.normal(jax.random.fold_in(rng, 3), (b, s, n)) * 0.5
+    C = jax.random.normal(jax.random.fold_in(rng, 4), (b, s, n)) * 0.5
+    D = jnp.ones((h,))
+    y, state = ssd_chunked(x, dt, A_log, B, C, D, chunk)
+    y_ref = ref_ssd(x, dt, A_log, B, C, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_attention_matches_dense(rng):
+    """The flash-style q-chunked XLA path == dense masked softmax."""
+    from repro.models import attention as A
+    from repro.configs import get_arch, smoke_variant
+
+    cfg = smoke_variant(get_arch("qwen2-0.5b"))
+    p = A.init_attn_params(rng, cfg, jnp.float32)
+    b, s = 1, 64
+    x = jax.random.normal(rng, (b, s, cfg.d_model))
+    q, k, v = A._project_qkv(p, x, cfg.num_heads, cfg.num_kv_heads,
+                             cfg.head_dim, cfg.norm_eps)
+    pos = jnp.arange(s)[None, :]
+    q = A.rope(q, pos, 10_000.0)
+    k = A.rope(k, pos, 10_000.0)
+    mask = A.make_causal_window_mask(pos, pos, 0)
+    dense = A.gqa_scores_softmax(q, k, v, mask, None)
+    chunked = A._chunked_gqa(q, k, v, jnp.asarray(0), None, q_chunk=16)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_softcap_values():
+    np.testing.assert_allclose(float(softcap(jnp.asarray(0.0), 30.0)), 0.0)
+    assert float(softcap(jnp.asarray(1e6), 30.0)) <= 30.0

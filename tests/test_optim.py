@@ -1,0 +1,70 @@
+"""Optimizer unit tests (adam / adamw / sgd / adafactor / clipping)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adafactor, adam, adamw, clip_by_global_norm, sgd
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_schedule,
+    linear_warmup_cosine,
+)
+
+
+def _rosenbrock_ish(p):
+    return jnp.sum(jnp.square(p["a"] - 1.3)) + jnp.sum(
+        jnp.square(p["b"] @ p["b"].T - jnp.eye(3)))
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: adam(5e-2), lambda: adamw(5e-2, weight_decay=1e-4),
+    lambda: sgd(5e-3, momentum=0.9), lambda: adafactor(5e-2)])
+def test_optimizers_descend(make_opt):
+    key = jax.random.PRNGKey(0)
+    params = {"a": jax.random.normal(key, (6,)),
+              "b": jax.random.normal(jax.random.fold_in(key, 1), (3, 3))}
+    opt = make_opt()
+    state = opt.init(params)
+    l0 = float(_rosenbrock_ish(params))
+    for _ in range(120):
+        grads = jax.grad(_rosenbrock_ish)(params)
+        params, state = opt.update(grads, state, params)
+    l1 = float(_rosenbrock_ish(params))
+    assert l1 < 0.3 * l0
+    assert all(bool(jnp.all(jnp.isfinite(x)))
+               for x in jax.tree.leaves(params))
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((7,))}
+    opt = adafactor(1e-2)
+    state = opt.init(params)
+    assert state.v_row["w"].shape == (64,)
+    assert state.v_col["w"].shape == (32,)
+    assert state.v_full["b"].shape == (7,)
+    # factored state never stores the full (64, 32) second moment
+    assert state.v_full["w"].shape == (1,)
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    np.testing.assert_allclose(float(norm), 20.0, rtol=1e-5)
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-4)
+    small = {"a": jnp.full((4,), 0.01)}
+    out, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.asarray(small["a"]), rtol=1e-6)
+
+
+def test_schedules():
+    assert float(constant_schedule(0.1)(1000)) == pytest.approx(0.1)
+    cos = cosine_schedule(1.0, 100, final_frac=0.1)
+    assert float(cos(0)) == pytest.approx(1.0, rel=1e-3)
+    assert float(cos(100)) == pytest.approx(0.1, rel=1e-3)
+    warm = linear_warmup_cosine(1.0, 10, 110)
+    assert float(warm(0)) == pytest.approx(0.1, rel=1e-3)
+    assert float(warm(9)) == pytest.approx(1.0, rel=1e-3)
+    assert float(warm(110)) < 0.2

@@ -1,0 +1,119 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fedavg_stacked, normalize_weights
+from repro.core.fairness import fairness_index, js_distance
+from repro.kernels import fedavg_reduce
+from repro.kernels.ref import ref_fedavg_flat
+from repro.models.layers import softcap
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _simplex(draw, n):
+    raw = draw(st.lists(st.floats(0.01, 10.0), min_size=n, max_size=n))
+    arr = np.asarray(raw)
+    return arr / arr.sum()
+
+
+@settings(**SETTINGS)
+@given(st.data(), st.integers(2, 6))
+def test_jsd_bounds_and_symmetry(data, n):
+    p = jnp.asarray([_simplex(data.draw, n)])
+    q = jnp.asarray([_simplex(data.draw, n)])
+    d_pq = float(js_distance(p, q)[0])
+    d_qp = float(js_distance(q, p)[0])
+    assert 0.0 <= d_pq <= 1.0 + 1e-6
+    assert abs(d_pq - d_qp) < 1e-5
+    assert float(js_distance(p, p)[0]) < 1e-5
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.floats(0.05, 1.0), min_size=2, max_size=8))
+def test_fairness_index_in_unit_interval(scores):
+    fi = float(fairness_index(jnp.asarray(scores)))
+    assert 0.0 < fi <= 1.0 + 1e-6
+    # perfect equality -> 1
+    fi_eq = float(fairness_index(jnp.full(len(scores), scores[0])))
+    assert abs(fi_eq - 1.0) < 1e-5
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 6), st.integers(1, 40), st.integers(0, 2 ** 31 - 1))
+def test_fedavg_convex_hull_and_permutation(c, p, seed):
+    """Eq. 3 output lies in the per-coordinate convex hull of the client
+    parameters and is permutation-equivariant."""
+    key = jax.random.PRNGKey(seed)
+    stacked = {"w": jax.random.normal(key, (c, p))}
+    sizes = jax.random.uniform(jax.random.fold_in(key, 1), (c,),
+                               minval=1.0, maxval=100.0)
+    w = normalize_weights(sizes)
+    agg = fedavg_stacked(stacked, w)["w"]
+    lo = stacked["w"].min(axis=0) - 1e-5
+    hi = stacked["w"].max(axis=0) + 1e-5
+    assert bool(jnp.all((agg >= lo) & (agg <= hi)))
+    perm = jax.random.permutation(jax.random.fold_in(key, 2), c)
+    agg_p = fedavg_stacked({"w": stacked["w"][perm]}, w[perm])["w"]
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(agg_p),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 8), st.integers(1, 5000), st.integers(0, 2 ** 31 - 1))
+def test_fedavg_kernel_matches_ref_random_shapes(c, p, seed):
+    key = jax.random.PRNGKey(seed)
+    stacked = jax.random.normal(key, (c, p))
+    w = normalize_weights(
+        jax.random.uniform(jax.random.fold_in(key, 1), (c,), minval=0.1,
+                           maxval=10.0))
+    out = fedavg_reduce(stacked, w)
+    ref = ref_fedavg_flat(stacked, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(st.floats(-100.0, 100.0), st.floats(1.0, 60.0))
+def test_softcap_bounded_and_monotone(x, cap):
+    y = float(softcap(jnp.asarray(x), cap))
+    assert abs(y) <= cap + 1e-4
+    y2 = float(softcap(jnp.asarray(x + 1.0), cap))
+    assert y2 >= y - 1e-6
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 3), st.integers(2, 32), st.integers(0, 2 ** 31 - 1))
+def test_survey_preferences_are_distributions(groups, questions, seed):
+    from repro.data import SurveyConfig, make_survey_data
+
+    cfg = SurveyConfig(num_groups=groups, num_questions=questions,
+                       num_options=4, d_embed=8, seed=seed % 1000)
+    data = make_survey_data(cfg)
+    sums = np.asarray(data.prefs.sum(-1))
+    np.testing.assert_allclose(sums, np.ones_like(sums), rtol=1e-5)
+    assert bool(jnp.all(data.sizes >= 1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_adam_step_finite_and_descends_quadratic(seed):
+    from repro.optim import adam
+
+    key = jax.random.PRNGKey(seed)
+    target = jax.random.normal(key, (8,))
+    params = {"x": jnp.zeros(8)}
+    opt = adam(0.1)
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.sum(jnp.square(p["x"] - target))
+
+    l0 = float(loss_fn(params))
+    for _ in range(50):
+        grads = jax.grad(loss_fn)(params)
+        params, state = opt.update(grads, state, params)
+        assert bool(jnp.all(jnp.isfinite(params["x"])))
+    assert float(loss_fn(params)) < l0

@@ -1,0 +1,70 @@
+"""Ring-buffer SWA decode (§Perf optimization) must match the baseline
+full-cache decode bit-for-bit (up to float tolerance)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, override, smoke_variant
+from repro.models import forward, init_params
+from repro.models.transformer import (
+    init_ring_cache,
+    ring_cache_from_full,
+    uses_ring_cache,
+)
+
+B, S, P = 2, 24, 12
+
+
+def _gemma_smoke(arch):
+    cfg = smoke_variant(get_arch(arch))
+    # at least one full local:global period (+ a tail layer to cover the
+    # unrolled-tail path), small windows, ring caches on
+    n_layers = len(cfg.window_pattern) + 1
+    return override(cfg, ring_cache=True, num_layers=n_layers)
+
+
+@pytest.mark.parametrize("arch", ["gemma3-27b", "gemma2-27b"])
+def test_ring_decode_matches_baseline(arch):
+    key = jax.random.PRNGKey(2)
+    cfg_ring = _gemma_smoke(arch)
+    cfg_base = override(cfg_ring, ring_cache=False)
+    assert uses_ring_cache(cfg_ring)
+    params = init_params(cfg_base, key)
+    tokens = jax.random.randint(key, (B, S), 0, cfg_base.vocab_size)
+
+    # baseline: standard prefill + full-cache decode
+    _, full_cache, _ = forward(params, cfg_base, tokens=tokens[:, :P],
+                               prefill_len=S)
+    # ring: convert the prefill cache, then decode with ring semantics
+    ring_cache = ring_cache_from_full(cfg_ring, full_cache, P - 1, B, S)
+
+    base_outs, ring_outs = [], []
+    cache_b, cache_r = full_cache, ring_cache
+    for t in range(P, S):
+        lb, cache_b, _ = forward(params, cfg_base, tokens=tokens[:, t:t + 1],
+                                 cache=cache_b,
+                                 cache_pos=jnp.asarray(t, jnp.int32))
+        lr, cache_r, _ = forward(params, cfg_ring, tokens=tokens[:, t:t + 1],
+                                 cache=cache_r,
+                                 cache_pos=jnp.asarray(t, jnp.int32))
+        base_outs.append(lb[:, 0])
+        ring_outs.append(lr[:, 0])
+    base = jnp.stack(base_outs, 1)
+    ring = jnp.stack(ring_outs, 1)
+    rel = float(jnp.max(jnp.abs(base - ring))) / (
+        float(jnp.max(jnp.abs(base))) + 1e-9)
+    assert rel < 1e-4, f"{arch}: rel={rel}"
+
+
+def test_ring_cache_memory_footprint():
+    """The ring cache must be much smaller than the full cache for a
+    local-dominated pattern (the point of the optimization)."""
+    cfg = override(get_arch("gemma3-27b"), ring_cache=True)
+    max_seq = 32768
+    ring = jax.eval_shape(lambda: init_ring_cache(cfg, 1, max_seq))
+    full_elems = cfg.num_layers * max_seq  # per (B, KV, hd) unit
+    ring_elems = sum(
+        int(np.prod(v.shape)) for v in jax.tree.leaves(ring)
+    ) // (2 * cfg.num_kv_heads * cfg.head_dim)  # k+v
+    assert ring_elems < 0.3 * full_elems, (ring_elems, full_elems)

@@ -1,0 +1,89 @@
+"""Distribution correctness of the paper's technique: the shard_map
+client-parallel FedAvg round must equal the vmap simulation bit-for-bit
+(up to float tolerance).
+
+Runs in a subprocess with 8 forced host devices so the main test process
+keeps its single-device view.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np, json
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import FedConfig, GPOConfig
+from repro.core import broadcast_to_clients, fedavg_stacked, normalize_weights
+from repro.core.federated import _make_local_train, make_sharded_round
+from repro.core.gpo import init_gpo_params
+from repro.data import SurveyConfig, make_survey_data
+from repro.optim import adam
+
+C = 8
+data = make_survey_data(SurveyConfig(num_groups=C, num_questions=30,
+                                     d_embed=16, seed=0))
+gcfg = GPOConfig(d_embed=16, d_model=32, num_layers=1, num_heads=2, d_ff=32)
+fcfg = FedConfig(num_clients=C, local_epochs=2, lr=1e-3,
+                 num_context=6, num_target=6)
+opt = adam(fcfg.lr)
+key = jax.random.PRNGKey(0)
+params = init_gpo_params(gcfg, key)
+groups = jnp.arange(C, dtype=jnp.int32)
+weights = normalize_weights(data.sizes[groups])
+keys = jax.random.split(jax.random.PRNGKey(1), C)
+
+client_params = broadcast_to_clients(params, C)
+opt_states = jax.vmap(opt.init)(client_params)
+
+# --- reference: vmap engine ---
+local_train = _make_local_train(gcfg, fcfg, data, opt)
+cp_v, os_v, losses_v = jax.jit(jax.vmap(local_train))(
+    client_params, opt_states, keys, groups)
+global_v = fedavg_stacked(cp_v, weights)
+
+# --- shard_map engine on an 8-device 'data' mesh ---
+mesh = jax.make_mesh((8,), ("data",))
+round_fn = make_sharded_round(gcfg, fcfg, data, mesh, client_axes=("data",),
+                              opt=opt)
+spec = NamedSharding(mesh, P("data"))
+put = lambda t: jax.tree.map(
+    lambda x: jax.device_put(x, spec), t)
+cp_s, os_s, losses_s = jax.jit(round_fn)(
+    put(client_params), put(opt_states), put(keys), put(groups),
+    put(weights))
+
+# every client shard must now hold the SAME global params == vmap result
+ok_losses = np.allclose(np.asarray(losses_v), np.asarray(losses_s),
+                        rtol=1e-4, atol=1e-5)
+errs = []
+for a, b in zip(jax.tree.leaves(global_v), jax.tree.leaves(cp_s)):
+    b0 = np.asarray(b)[0]
+    errs.append(float(np.max(np.abs(np.asarray(a) - b0))))
+clients_equal = all(
+    np.allclose(np.asarray(b)[0], np.asarray(b)[-1], rtol=1e-5, atol=1e-6)
+    for b in jax.tree.leaves(cp_s))
+print(json.dumps({"ok_losses": bool(ok_losses),
+                  "max_err": max(errs),
+                  "clients_equal": bool(clients_equal)}))
+"""
+
+
+@pytest.mark.slow
+def test_shard_map_round_matches_vmap():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", SCRIPT], cwd=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), env=env,
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    result = json.loads(out.stdout.strip().splitlines()[-1])
+    assert result["ok_losses"]
+    assert result["max_err"] < 1e-4
+    assert result["clients_equal"]
