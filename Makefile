@@ -1,0 +1,18 @@
+# Developer entry points. `make test` is the tier-1 verify command from
+# ROADMAP.md; `make test-fast` deselects the paper-scale tests marked
+# @pytest.mark.slow so the quick suite stays under a few minutes.
+PY := PYTHONPATH=src python
+
+.PHONY: test test-fast bench bench-round
+
+test:
+	$(PY) -m pytest -x -q
+
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+bench-round:
+	$(PY) -m benchmarks.bench_round
+
+bench:
+	$(PY) -m benchmarks.run

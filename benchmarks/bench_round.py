@@ -1,0 +1,230 @@
+"""Round-engine / aggregation / attention-grid perf benchmark.
+
+Measures the three hot paths the fused federated engine touches and
+writes ``BENCH_round.json`` (repo root):
+
+1. **round_engine** — rounds/sec of ``FederatedGPO`` with the per-round
+   Python loop driver (one jit dispatch + host sync per round, the seed
+   behaviour) vs the fused ``lax.scan`` block driver (one dispatch per
+   block, on-device metrics). Run on CPU with the paper's round
+   structure — 17 groups split 10 train / 7 eval, 6 local epochs/round,
+   eval every 10 rounds, 200 communication rounds — at benchmark model
+   scale (the GPO predictor shrunk until a round is dispatch-bound,
+   which is the regime the scan driver exists for; at paper model scale
+   on accelerators the same dispatch tax returns because device rounds
+   are fast).
+2. **aggregation** — Eq. 3 on the (32, 1e6) flattened client matrix:
+   jnp weighted-sum vs the Pallas ``fedavg_reduce`` kernel (GB/s), and
+   the (C, P) flatten itself: legacy per-client Python-loop flatten vs
+   the single vmapped tree-ravel (``tree_ravel_clients``).
+3. **gpo_attention** — banded grid vs full predicated grid: visited-tile
+   ratio (the O(S*m + S) claim at the grid level) and wall-clock in the
+   t >> m eval regime (interpret mode on CPU).
+
+CPU runtime knobs (set before jax import, override via env): the legacy
+XLA:CPU runtime + single-thread eigen minimise per-op overhead for the
+tiny-op graphs this benchmark times, and the ``rbg`` PRNG keeps key
+derivation off the critical path. They apply to BOTH sides of every
+comparison.
+
+  PYTHONPATH=src python -m benchmarks.bench_round [--rounds 200]
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_cpu_use_thunk_runtime=false --xla_cpu_multi_thread_eigen=false "
+    "intra_op_parallelism_threads=1")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import json
+import time
+
+import jax
+
+jax.config.update("jax_default_prng_impl", "rbg")
+
+import jax.numpy as jnp
+import numpy as np
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_round.json")
+
+
+def _best_of(fn, reps: int) -> float:
+    """Best-of-``reps`` wall-clock seconds (min filters scheduler noise)."""
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out) if out is not None else None
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+# ---------------------------------------------------------------------------
+# 1. round engine: per-round loop vs fused scan
+# ---------------------------------------------------------------------------
+def bench_round_engine(rounds: int, reps: int = 5) -> dict:
+    from repro.configs import FedConfig, GPOConfig
+    from repro.core import FederatedGPO
+    from repro.data import SurveyConfig, make_survey_data, split_groups
+
+    data = make_survey_data(SurveyConfig(
+        num_groups=17, num_questions=16, d_embed=4, seed=0))
+    train_groups, eval_groups = split_groups(data, train_frac=0.6, seed=0)
+    gcfg = GPOConfig(d_embed=4, d_model=8, num_layers=1, num_heads=1,
+                     d_ff=16)
+    fcfg = FedConfig(num_clients=len(train_groups), rounds=rounds,
+                     local_epochs=6, eval_every=10, num_context=1,
+                     num_target=1)
+
+    result = {
+        "rounds": rounds,
+        "num_clients": int(len(train_groups)),
+        "num_eval_groups": int(len(eval_groups)),
+        "local_epochs": fcfg.local_epochs,
+        "eval_every": fcfg.eval_every,
+    }
+    for engine in ("loop", "scan"):
+        fed = FederatedGPO(gcfg, fcfg, data, train_groups, eval_groups)
+        fed.run(rounds=rounds, engine=engine)  # compile + warm
+        dt = _best_of(lambda: fed.run(rounds=rounds, engine=engine), reps)
+        result[f"{engine}_rounds_per_sec"] = rounds / dt
+        result[f"{engine}_wall_s"] = dt
+        print(f"round_engine/{engine}: {rounds / dt:,.1f} rounds/s "
+              f"({dt:.3f} s / {rounds} rounds)")
+    result["scan_speedup"] = (result["scan_rounds_per_sec"]
+                              / result["loop_rounds_per_sec"])
+    print(f"round_engine/speedup: {result['scan_speedup']:.2f}x")
+    return result
+
+
+# ---------------------------------------------------------------------------
+# 2. aggregation: jnp vs Pallas reduce; loop vs vmapped flatten
+# ---------------------------------------------------------------------------
+def bench_aggregation(c: int = 32, p: int = 1_000_000, reps: int = 5) -> dict:
+    from repro.core import fedavg_stacked, normalize_weights
+    from repro.kernels import fedavg_reduce
+    from repro.utils.pytree import tree_flatten_to_vector, tree_ravel_clients
+
+    key = jax.random.PRNGKey(0)
+    stacked = jax.random.normal(key, (c, p))
+    w = normalize_weights(jnp.ones((c,)))
+    gb = c * p * 4 / 1e9
+
+    jnp_reduce = jax.jit(lambda s, w: fedavg_stacked({"x": s}, w)["x"])
+    jnp_reduce(stacked, w)
+    t_jnp = _best_of(lambda: jnp_reduce(stacked, w), reps)
+    fedavg_reduce(stacked, w)
+    t_pallas = _best_of(lambda: fedavg_reduce(stacked, w), reps)
+
+    # flatten path: a client-stacked tree with 1e6 params over 16 leaves
+    leaves = 16
+    tree = {f"w{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                       (c, p // leaves))
+            for i in range(leaves)}
+
+    def loop_flatten(t):  # the pre-refactor per-client Python loop
+        return jnp.stack([
+            tree_flatten_to_vector(jax.tree.map(lambda x: x[i], t))
+            for i in range(c)])
+
+    loop_fn = jax.jit(loop_flatten)
+    vmap_fn = jax.jit(tree_ravel_clients)
+    t0 = time.perf_counter()
+    loop_fn(tree)
+    t_loop_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    vmap_fn(tree)
+    t_vmap_cold = time.perf_counter() - t0
+    t_loop = _best_of(lambda: loop_fn(tree), reps)
+    t_vmap = _best_of(lambda: vmap_fn(tree), reps)
+
+    result = {
+        "clients": c, "params": p,
+        "jnp_reduce_us": t_jnp * 1e6,
+        "jnp_reduce_gbps": gb / t_jnp,
+        "pallas_reduce_us": t_pallas * 1e6,
+        "pallas_reduce_gbps": gb / t_pallas,
+        "pallas_mode": ("interpret (CPU validation)"
+                        if jax.default_backend() != "tpu" else "native"),
+        "loop_flatten_us": t_loop * 1e6,
+        "vmapped_flatten_us": t_vmap * 1e6,
+        "flatten_speedup": t_loop / t_vmap,
+        "loop_flatten_cold_s": t_loop_cold,
+        "vmapped_flatten_cold_s": t_vmap_cold,
+        "flatten_cold_speedup": t_loop_cold / t_vmap_cold,
+    }
+    print(f"aggregation/reduce: jnp {gb / t_jnp:.2f} GB/s, "
+          f"pallas[{result['pallas_mode']}] {gb / t_pallas:.2f} GB/s")
+    print(f"aggregation/flatten: loop {t_loop * 1e6:,.0f} us, "
+          f"vmapped {t_vmap * 1e6:,.0f} us "
+          f"({result['flatten_speedup']:.2f}x steady, "
+          f"{result['flatten_cold_speedup']:.2f}x incl. trace+compile)")
+    return result
+
+
+# ---------------------------------------------------------------------------
+# 3. GPO attention: banded vs full grid
+# ---------------------------------------------------------------------------
+def bench_gpo_grid(s: int = 512, m: int = 8, b: int = 32, h: int = 4,
+                   hd: int = 32, reps: int = 3) -> dict:
+    from repro.kernels import gpo_attention
+    from repro.kernels.gpo_attention import gpo_tile_counts
+
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (s, h, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (s, h, hd))
+    banded_tiles, full_tiles = gpo_tile_counts(s, m, b, b)
+
+    gpo_attention(q, k, v, num_ctx=m, bq=b, bk=b)
+    t_banded = _best_of(
+        lambda: gpo_attention(q, k, v, num_ctx=m, bq=b, bk=b), reps)
+    gpo_attention(q, k, v, num_ctx=m, bq=b, bk=b, banded=False)
+    t_full = _best_of(
+        lambda: gpo_attention(q, k, v, num_ctx=m, bq=b, bk=b, banded=False),
+        reps)
+
+    result = {
+        "seq": s, "num_ctx": m, "block": b, "heads": h,
+        "banded_tiles": banded_tiles,
+        "full_grid_tiles": full_tiles,
+        "tiles_visited_ratio": banded_tiles / full_tiles,
+        "banded_us": t_banded * 1e6,
+        "full_grid_us": t_full * 1e6,
+        "wallclock_speedup": t_full / t_banded,
+        "mode": ("interpret (CPU validation)"
+                 if jax.default_backend() != "tpu" else "native"),
+    }
+    print(f"gpo_grid: tiles {banded_tiles}/{full_tiles} "
+          f"(ratio {result['tiles_visited_ratio']:.3f}), wall "
+          f"{t_banded * 1e6:,.0f} vs {t_full * 1e6:,.0f} us "
+          f"({result['wallclock_speedup']:.2f}x, {result['mode']})")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--reps", type=int, default=5)
+    args = ap.parse_args()
+
+    report = {
+        "backend": jax.default_backend(),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "prng": "rbg",
+        "round_engine": bench_round_engine(args.rounds, args.reps),
+        "aggregation": bench_aggregation(reps=args.reps),
+        "gpo_attention": bench_gpo_grid(),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {os.path.abspath(OUT_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

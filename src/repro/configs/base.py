@@ -167,6 +167,11 @@ class GPOConfig:
     # (interpret mode on CPU; native on TPU). The kernel has no custom
     # VJP, so training keeps the jnp path. False = jnp everywhere.
     use_pallas_attention: bool = False
+    # unroll factor for the depth scan in gpo_apply. The while-loop (and
+    # its transpose in the backward pass) is pure overhead at the paper's
+    # small num_layers; num_layers (full unroll) removes it at the cost
+    # of a slightly larger executable. Same ops either way.
+    layer_unroll: int = 1
 
     @property
     def head_dim(self) -> int:
@@ -190,6 +195,20 @@ class FedConfig:
     # re-initialize client Adam moments each round (the paper leaves this
     # unspecified; stale moments vs freshly-aggregated params can slow FL)
     reset_opt_each_round: bool = False
+    # round driver: "scan" fuses blocks of rounds into one jitted
+    # lax.scan with on-device metric accumulation (DESIGN.md §3); "loop"
+    # is the per-round Python dispatch (one jit call + host sync per
+    # round), kept for A/B benchmarking and as the paper-faithful
+    # reference execution order.
+    engine: str = "scan"
+    # unroll factor for the fused scan driver (lax.scan unroll): trades
+    # compile time for less per-round loop machinery. 1 = no unroll.
+    scan_unroll: int = 1
+    # aggregate with the Pallas fedavg_reduce kernel on the flattened
+    # (C, P) client matrix instead of the per-leaf jnp weighted sum
+    # (Eq. 3 either way; see DESIGN.md §4). Applies to both the vmapped
+    # and the shard_map engines.
+    use_pallas_aggregation: bool = False
     seed: int = 0
 
 

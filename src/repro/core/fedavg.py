@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.utils.pytree import (
-    tree_flatten_to_vector,
+    tree_index,
+    tree_ravel_clients,
     tree_unflatten_from_vector,
 )
 
@@ -64,11 +65,7 @@ def fedavg_allreduce(local_params: PyTree, weight: jnp.ndarray,
 
 def fedavg_flat(stacked_params: PyTree, weights: jnp.ndarray) -> PyTree:
     """Flattened-vector FedAvg (the Pallas `fedavg_reduce` contract)."""
-    num_clients = weights.shape[0]
-    like = jax.tree.map(lambda x: x[0], stacked_params)
-    vecs = jnp.stack([
-        tree_flatten_to_vector(jax.tree.map(lambda x: x[c], stacked_params))
-        for c in range(num_clients)
-    ])  # (C, P)
+    like = tree_index(stacked_params, 0)
+    vecs = tree_ravel_clients(stacked_params)  # (C, P)
     avg = jnp.einsum("c,cp->p", jnp.asarray(weights, jnp.float32), vecs)
     return tree_unflatten_from_vector(avg, like)

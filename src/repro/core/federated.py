@@ -17,6 +17,21 @@ Two execution engines expose the same round semantics:
   ``shard_map``; local epochs run without any cross-client collective and
   the round ends in ONE weighted psum (+ the hierarchical `pod` axis on
   multi-pod meshes). This is the TPU-production engine the dry-run lowers.
+
+``FederatedGPO`` itself has two round *drivers* (DESIGN.md §3):
+
+* ``engine="scan"`` (default) — the fused multi-round driver: the whole
+  requested block of rounds is ONE jitted ``lax.scan`` (or blocks of
+  ``log_every`` rounds when live logging is requested). Per-round losses
+  and the eval-cadence alignment scores accumulate on device and transfer
+  to host once per block; the per-client optimizer buffers are donated
+  into the call. Zero per-round Python dispatch or device→host sync.
+* ``engine="loop"`` — one jitted call per round with a host sync on the
+  loss (the original dispatch pattern), kept for A/B benchmarking
+  (``benchmarks/bench_round.py``) and equivalence tests.
+
+Both drivers derive per-round RNG keys identically, so they produce the
+same ``History`` up to float reassociation.
 """
 from __future__ import annotations
 
@@ -38,7 +53,13 @@ from repro.core.fedavg import (
 )
 from repro.core.gpo import gpo_loss, init_gpo_params, predict_preferences
 from repro.data.surveys import SurveyData, sample_icl_batch
+from repro.kernels import fedavg_reduce, fedavg_reduce_tree
 from repro.optim import adam
+from repro.utils.pytree import (
+    tree_index,
+    tree_ravel_clients,
+    tree_unflatten_from_vector,
+)
 
 PyTree = Any
 
@@ -120,8 +141,7 @@ class FederatedGPO:
         m = fed_cfg.batch_groups or num_clients
         m = min(m, num_clients)
 
-        @jax.jit
-        def round_fn(global_params, opt_states, key):
+        def round_step(global_params, opt_states, key):
             k_sub, k_train = jax.random.split(key)
             if m < num_clients:
                 idx = jax.random.choice(k_sub, num_clients, (m,),
@@ -142,41 +162,152 @@ class FederatedGPO:
             opt_states = jax.tree.map(
                 lambda full, sub: full.at[idx].set(sub), opt_states,
                 opt_sub)
-            new_global = fedavg_stacked(client_params, w)
+            if fed_cfg.use_pallas_aggregation:
+                new_global = fedavg_reduce_tree(client_params, w)
+            else:
+                new_global = fedavg_stacked(client_params, w)
             return new_global, opt_states, losses
 
-        @jax.jit
         def eval_fn(global_params, key):
             keys = jax.random.split(key, len(eval_groups))
             return jax.vmap(eval_group, in_axes=(None, 0, 0))(
                 global_params, keys, self.eval_groups)
 
-        self._round = round_fn
-        self._eval = eval_fn
+        num_eval = len(eval_groups)
 
-    def run(self, rounds: int | None = None,
-            log_every: int = 0) -> History:
+        # Fused multi-round driver: a whole block of rounds is one jitted
+        # lax.scan. ``eval_mask`` (bool per round, known on the host) picks
+        # the rounds that also run the Eq. 4 evaluation; skipped rounds
+        # emit zeros that the host discards, so metric accumulation stays
+        # on device and the block performs exactly one host transfer.
+        # Only the per-client optimizer buffers are donated: callers (and
+        # the seed tests) legitimately hold references to the previous
+        # global model across ``run`` calls.
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def block_fn(global_params, opt_states, key, eval_mask):
+            def body(carry, do_eval):
+                g, opt_s, k = carry
+                k, k_round, k_eval = jax.random.split(k, 3)
+                g, opt_s, losses = round_step(g, opt_s, k_round)
+                scores = jax.lax.cond(
+                    do_eval,
+                    lambda gp, ke: eval_fn(gp, ke).astype(jnp.float32),
+                    lambda gp, ke: jnp.zeros((num_eval,), jnp.float32),
+                    g, k_eval)
+                return (g, opt_s, k), (jnp.mean(losses), scores)
+
+            (global_params, opt_states, key), (losses, scores) = jax.lax.scan(
+                body, (global_params, opt_states, key), eval_mask,
+                unroll=fed_cfg.scan_unroll)
+            return global_params, opt_states, key, losses, scores
+
+        self._round = jax.jit(round_step)
+        self._eval = jax.jit(eval_fn)
+        self._block = block_fn
+
+    def _eval_mask(self, rounds: int) -> np.ndarray:
+        """Rounds that evaluate: every ``eval_every``-th and the last."""
+        mask = np.zeros(rounds, np.bool_)
+        mask[:: self.fed_cfg.eval_every] = True
+        mask[rounds - 1] = True
+        return mask
+
+    def _append_eval(self, hist: History, r: int, scores: np.ndarray,
+                     log_every: int) -> None:
+        hist.eval_rounds.append(r)
+        hist.eval_scores.append(scores)
+        hist.eval_mean_as.append(float(scores.mean()))
+        hist.eval_fi.append(float(fairness.fairness_index(scores)))
+        hist.eval_cov.append(
+            float(fairness.coefficient_of_variation(scores)))
+        if log_every and r % log_every == 0:
+            print(f"[fed] round {r:5d} loss={hist.round_loss[r]:.4f} "
+                  f"AS={hist.eval_mean_as[-1]:.4f} "
+                  f"FI={hist.eval_fi[-1]:.4f}")
+
+    def run(self, rounds: int | None = None, log_every: int = 0,
+            engine: str | None = None) -> History:
+        """Run ``rounds`` FedAvg rounds and return the metric ``History``.
+
+        ``engine`` overrides ``FedConfig.engine``: "scan" executes the
+        block as one fused jitted scan (default), "loop" dispatches one
+        jitted round at a time.
+        """
+        rounds = rounds or self.fed_cfg.rounds
+        engine = engine or self.fed_cfg.engine
+        if rounds <= 0:
+            return History()
+        if engine == "scan":
+            return self._run_scan(rounds, log_every)
+        if engine == "loop":
+            return self._run_loop(rounds, log_every)
+        raise ValueError(f"unknown engine {engine!r} (want 'scan'|'loop')")
+
+    def _run_scan(self, rounds: int, log_every: int) -> History:
         fed = self.fed_cfg
-        rounds = rounds or fed.rounds
-        hist = History()
+        eval_mask = self._eval_mask(rounds)
         key = jax.random.PRNGKey(fed.seed + 1)
+        hist = History()
+        # one fused block normally; with log_every, blocks of log_every
+        # rounds so progress still reaches the console while training
+        # (the RNG chain threads through the carried key, so chunking
+        # does not change any per-round key).
+        chunk = min(log_every, rounds) if log_every else rounds
+        full_end = (rounds // chunk) * chunk
+        for start in range(0, full_end, chunk):
+            mask = eval_mask[start:start + chunk]
+            try:
+                (self.global_params, self.opt_states, key, losses,
+                 scores) = self._block(self.global_params, self.opt_states,
+                                       key, jnp.asarray(mask))
+            except BaseException:
+                self._recover_donated_opt_states()
+                raise
+            base = len(hist.round_loss)
+            hist.round_loss.extend(float(x) for x in np.asarray(losses))
+            scores = np.asarray(scores)  # (chunk, K); valid where mask
+            for r in np.nonzero(mask)[0]:
+                self._append_eval(hist, base + int(r), scores[r], log_every)
+        # remainder shorter than a chunk: run per-round (same key chain)
+        # rather than compiling the fused block a second time for a tail
+        for r in range(full_end, rounds):
+            key = self._dispatch_round(hist, key, r, eval_mask, log_every)
+        return hist
+
+    def _dispatch_round(self, hist: History, key, r: int, eval_mask,
+                        log_every: int):
+        """One per-round dispatch + metric append; shared by the loop
+        driver and the scan driver's sub-chunk tail. Returns the carried
+        key (chain identical to one scan step)."""
+        key, k_round, k_eval = jax.random.split(key, 3)
+        self.global_params, self.opt_states, losses = self._round(
+            self.global_params, self.opt_states, k_round)
+        hist.round_loss.append(float(jnp.mean(losses)))
+        if eval_mask[r]:
+            scores = np.asarray(self._eval(self.global_params, k_eval))
+            self._append_eval(hist, r, scores, log_every)
+        return key
+
+    def _recover_donated_opt_states(self) -> None:
+        """After an interrupted block call the donated opt buffers may be
+        consumed; rebuild them from the still-valid global params so the
+        trainer stays usable (Adam moments reset, training state kept).
+        Buffers that were never actually donated (e.g. interrupt during
+        tracing, or a backend that ignores donation) are left alone."""
+        leaves = jax.tree.leaves(self.opt_states)
+        deleted = any(getattr(x, "is_deleted", lambda: False)()
+                      for x in leaves)
+        if deleted:
+            per_client = broadcast_to_clients(self.global_params,
+                                              len(self.train_groups))
+            self.opt_states = jax.vmap(self.opt.init)(per_client)
+
+    def _run_loop(self, rounds: int, log_every: int) -> History:
+        hist = History()
+        key = jax.random.PRNGKey(self.fed_cfg.seed + 1)
+        eval_mask = self._eval_mask(rounds)  # shared cadence, both drivers
         for r in range(rounds):
-            key, k_round, k_eval = jax.random.split(key, 3)
-            self.global_params, self.opt_states, losses = self._round(
-                self.global_params, self.opt_states, k_round)
-            hist.round_loss.append(float(jnp.mean(losses)))
-            if r % fed.eval_every == 0 or r == rounds - 1:
-                scores = np.asarray(self._eval(self.global_params, k_eval))
-                hist.eval_rounds.append(r)
-                hist.eval_scores.append(scores)
-                hist.eval_mean_as.append(float(scores.mean()))
-                hist.eval_fi.append(float(fairness.fairness_index(scores)))
-                hist.eval_cov.append(
-                    float(fairness.coefficient_of_variation(scores)))
-                if log_every and r % log_every == 0:
-                    print(f"[fed] round {r:5d} loss={hist.round_loss[-1]:.4f} "
-                          f"AS={hist.eval_mean_as[-1]:.4f} "
-                          f"FI={hist.eval_fi[-1]:.4f}")
+            key = self._dispatch_round(hist, key, r, eval_mask, log_every)
         return hist
 
 
@@ -205,13 +336,23 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
         new_params, new_opt, losses = jax.vmap(local_train)(
             client_params, opt_states, keys, group_ids)
         # Eq. 3: weighted psum over the client axes == aggregation server.
-        local_weighted = jax.tree.map(
-            lambda x: jnp.sum(
-                x.astype(jnp.float32)
-                * weights.reshape((-1,) + (1,) * (x.ndim - 1)), axis=0),
-            new_params)
-        global_params = fedavg_allreduce(
-            local_weighted, jnp.asarray(1.0, jnp.float32), axes)
+        if fed_cfg.use_pallas_aggregation:
+            # flatten the local client shard to (C_local, P) in one
+            # vmapped ravel, reduce it with the Pallas kernel, then ONE
+            # psum of the flat vector plays the aggregation server.
+            vecs = tree_ravel_clients(new_params)
+            local_vec = fedavg_reduce(vecs, weights.astype(jnp.float32))
+            global_vec = jax.lax.psum(local_vec, axes)
+            global_params = tree_unflatten_from_vector(
+                global_vec, tree_index(new_params, 0))
+        else:
+            local_weighted = jax.tree.map(
+                lambda x: jnp.sum(
+                    x.astype(jnp.float32)
+                    * weights.reshape((-1,) + (1,) * (x.ndim - 1)), axis=0),
+                new_params)
+            global_params = fedavg_allreduce(
+                local_weighted, jnp.asarray(1.0, jnp.float32), axes)
         # redistribute: every client's next-round start is the global model
         c_local = keys.shape[0]
         client_params = broadcast_to_clients(global_params, c_local)

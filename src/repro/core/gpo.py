@@ -123,7 +123,8 @@ def gpo_apply(params: dict, cfg: GPOConfig, ctx_x, ctx_y, tgt_x):
         x = x + jax.nn.gelu(h2 @ layer.w1) @ layer.w2
         return x, None
 
-    x, _ = jax.lax.scan(body, x, params["layers"])
+    x, _ = jax.lax.scan(body, x, params["layers"],
+                        unroll=min(cfg.layer_unroll, cfg.num_layers))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     out = x[m:] @ params["head"]  # (t, 1 or 2)
     mu = out[:, 0]

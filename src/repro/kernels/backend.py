@@ -1,0 +1,10 @@
+"""Single definition of the interpret-mode default shared by every
+Pallas wrapper: interpret on CPU (the validation path), native on TPU.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def interpret_default() -> bool:
+    return jax.default_backend() != "tpu"

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import interpret_default
+
 DEFAULT_BLOCK = 2048
 
 
@@ -27,8 +29,15 @@ def _fedavg_kernel(w_ref, x_ref, o_ref):
 
 def fedavg_reduce_flat(stacked: jnp.ndarray, weights: jnp.ndarray, *,
                        block: int = DEFAULT_BLOCK,
-                       interpret: bool = True) -> jnp.ndarray:
-    """stacked (C, P), weights (C,) -> (P,). P is padded to ``block``."""
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """stacked (C, P), weights (C,) -> (P,). P is padded to ``block``.
+
+    ``interpret`` defaults to the backend (interpret on CPU, native on
+    TPU), matching the ``ops.py`` wrappers, so direct callers never
+    silently run interpret mode on hardware.
+    """
+    if interpret is None:
+        interpret = interpret_default()
     c, p = stacked.shape
     pad = (-p) % block
     if pad:

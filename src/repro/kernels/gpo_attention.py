@@ -5,13 +5,17 @@ The preference predictor's mask is irregular for a causal flash kernel:
   * target tokens attend to context tokens AND themselves only.
 
 TPU-native design (DESIGN.md §4): block the (q, k) plane into MXU-aligned
-tiles; (target-q x target-k) tiles are *diagonal-only* — off-diagonal
-target-target tiles are skipped entirely with @pl.when, so the kernel does
-O(S*m + S) work instead of O(S^2) when targets dominate (the GPO regime:
-t >> m at evaluation).
+tiles. The default *banded* grid is ``(h, num_qb, ctx_blocks + 1)``: for
+every q-row of tiles the kernel walks only the k-tiles that contain
+context columns, plus one final k-step that maps onto the diagonal tile
+(target self-attention). The O(S*m + S) work claim therefore holds at the
+grid level — the kernel never visits (and never DMAs) the off-diagonal
+target×target tiles at all, instead of iterating the full O(S^2/b^2) grid
+and predicating tiles away with ``@pl.when`` (the legacy ``banded=False``
+grid, kept for A/B benchmarking).
 
 num_ctx is static (it is part of the training configuration, Eq. 1), so
-the block-relevance predicate folds at trace time.
+``ctx_blocks`` and the banded grid shape fold at trace time.
 """
 from __future__ import annotations
 
@@ -25,8 +29,22 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _online_softmax_update(s, v, m_ref, l_ref, acc_ref):
+    """One flash-attention accumulator update with scores ``s`` (bq, bk)."""
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot(p.astype(v.dtype), v))
+    m_ref[...] = m_new
+
+
 def _gpo_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                 scale: float, num_ctx: int, num_kb: int, bq: int, bk: int):
+    """Legacy full grid (h, num_qb, num_kb): every target×target tile is
+    visited and skipped with @pl.when — O(S^2/b^2) grid steps."""
     i_q = pl.program_id(1)
     i_k = pl.program_id(2)
 
@@ -55,15 +73,7 @@ def _gpo_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         # neural-process mask: key is context, or key == query (self)
         mask = jnp.logical_or(k_pos < num_ctx, k_pos == q_pos)
         s = jnp.where(mask, s, NEG_INF)
-
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-        p = jnp.exp(s - m_new[:, None])
-        alpha = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
-        acc_ref[...] = (acc_ref[...] * alpha[:, None]
-                        + jax.lax.dot(p.astype(v.dtype), v))
-        m_ref[...] = m_new
+        _online_softmax_update(s, v, m_ref, l_ref, acc_ref)
 
     @pl.when(i_k == num_kb - 1)
     def _finalize():
@@ -71,11 +81,76 @@ def _gpo_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _gpo_kernel_banded(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                       scale: float, num_ctx: int, ctx_blocks: int, bq: int,
+                       bk: int):
+    """Banded grid (h, num_qb, ctx_blocks + 1); requires bq == bk.
+
+    k-steps t < ctx_blocks stream the context band; the last step
+    (t == ctx_blocks) is mapped by the BlockSpec index_map onto the
+    diagonal tile of this q-row. When the diagonal tile already lies
+    inside the context band (i_q < ctx_blocks) the last step is a
+    duplicate visit and only the finalize runs.
+    """
+    i_q = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    is_diag_step = t == ctx_blocks
+    kb = jnp.where(is_diag_step, i_q, t)  # mirrors the kv index_map
+    q_start, k_start = i_q * bq, kb * bk
+    # skip the diagonal step when the tile was already accumulated as a
+    # context step (its k-block index is < ctx_blocks)
+    fresh = jnp.logical_or(jnp.logical_not(is_diag_step), i_q >= ctx_blocks)
+
+    @pl.when(fresh)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.logical_or(k_pos < num_ctx, k_pos == q_pos)
+        s = jnp.where(mask, s, NEG_INF)
+        _online_softmax_update(s, v, m_ref, l_ref, acc_ref)
+
+    @pl.when(t == ctx_blocks)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _banded_ctx_blocks(num_ctx: int, bk: int, num_kb: int) -> int | None:
+    """k-blocks of the context band, or None when the band saturates the
+    grid (banded would add a duplicate diagonal step per q-row, so the
+    full grid is used instead). Single source of truth for the kernel
+    wrapper and gpo_tile_counts."""
+    ctx_blocks = min(-(-num_ctx // bk), num_kb)
+    return ctx_blocks if ctx_blocks < num_kb else None
+
+
+def gpo_tile_counts(s: int, num_ctx: int, bq: int, bk: int) -> tuple[int, int]:
+    """(banded_tiles, full_grid_tiles) per head for a given shape —
+    the grid-level work ratio reported by benchmarks/bench_round.py."""
+    num_qb, num_kb = s // bq, s // bk
+    ctx_blocks = _banded_ctx_blocks(num_ctx, bk, num_kb)
+    banded = num_qb * (ctx_blocks + 1 if ctx_blocks is not None else num_kb)
+    return banded, num_qb * num_kb
+
+
 def gpo_attention_hsd(q, k, v, *, num_ctx: int, bq: int = 128, bk: int = 128,
-                      interpret: bool = True):
+                      interpret: bool = True, banded: bool = True):
     """q, k, v (H, S, hd) -> (H, S, hd) with the neural-process mask.
 
-    S must be a multiple of the block sizes (ops.gpo_attention pads).
+    S must be a multiple of the block sizes (ops.gpo_attention pads). The
+    banded grid requires bq == bk (the wrapper falls back to the full
+    grid otherwise).
     """
     h, s, hd = q.shape
     assert s % bq == 0 and s % bk == 0, (s, bq, bk)
@@ -85,14 +160,31 @@ def gpo_attention_hsd(q, k, v, *, num_ctx: int, bq: int = 128, bk: int = 128,
     def idx(i, j, t):
         return (i, j, 0)
 
-    def kv_idx(i, j, t):
-        return (i, t, 0)
+    if banded:
+        assert bq == bk, "banded grid requires square tiles"
+        ctx_blocks = _banded_ctx_blocks(num_ctx, bk, num_kb)
+        banded = ctx_blocks is not None
+    if banded:
+        grid = (h, num_qb, ctx_blocks + 1)
+        kernel = functools.partial(_gpo_kernel_banded, scale=scale,
+                                   num_ctx=num_ctx, ctx_blocks=ctx_blocks,
+                                   bq=bq, bk=bk)
 
-    kernel = functools.partial(_gpo_kernel, scale=scale, num_ctx=num_ctx,
-                               num_kb=num_kb, bq=bq, bk=bk)
+        def kv_idx(i, j, t):
+            # last k-step -> this q-row's diagonal tile; earlier steps
+            # walk the context band left-to-right
+            return (i, jnp.where(t == ctx_blocks, j, t), 0)
+    else:
+        grid = (h, num_qb, num_kb)
+        kernel = functools.partial(_gpo_kernel, scale=scale, num_ctx=num_ctx,
+                                   num_kb=num_kb, bq=bq, bk=bk)
+
+        def kv_idx(i, j, t):
+            return (i, t, 0)
+
     return pl.pallas_call(
         kernel,
-        grid=(h, num_qb, num_kb),
+        grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, hd), idx),
             pl.BlockSpec((1, bk, hd), kv_idx),

@@ -11,18 +11,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import interpret_default as _interpret_default
 from repro.kernels.fedavg_reduce import fedavg_reduce_flat
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.gpo_attention import gpo_attention_hsd
 from repro.kernels.ssd_scan import ssd_scan_bhsp
 from repro.utils.pytree import (
-    tree_flatten_to_vector,
+    tree_index,
+    tree_ravel_clients,
     tree_unflatten_from_vector,
 )
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _pad_seq(x, block, axis):
@@ -60,18 +58,21 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "num_ctx", "bq", "bk", "interpret"))
+    "num_ctx", "bq", "bk", "interpret", "banded"))
 def gpo_attention(q, k, v, *, num_ctx: int, bq: int = 128, bk: int = 128,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None, banded: bool = True):
     """GPO layout: q/k/v (S, H, hd) -> (S, H, hd); neural-process mask.
 
     Padding appends masked-out target rows (they only self-attend, so real
-    outputs are unaffected)."""
+    outputs are unaffected). ``banded`` selects the O(S*m + S) grid that
+    only visits context-band + diagonal tiles (needs bq == bk; falls back
+    to the full predicated grid otherwise)."""
     if interpret is None:
         interpret = _interpret_default()
     s_orig = q.shape[0]
     bq = min(bq, max(16, s_orig))
     bk = min(bk, max(16, s_orig))
+    banded = banded and bq == bk
     qt = q.transpose(1, 0, 2)
     kt = k.transpose(1, 0, 2)
     vt = v.transpose(1, 0, 2)
@@ -80,7 +81,7 @@ def gpo_attention(q, k, v, *, num_ctx: int, bq: int = 128, bk: int = 128,
     kt = jnp.pad(kt, ((0, 0), (0, target - kt.shape[1]), (0, 0)))
     vt = jnp.pad(vt, ((0, 0), (0, target - vt.shape[1]), (0, 0)))
     out = gpo_attention_hsd(qt, kt, vt, num_ctx=num_ctx, bq=bq, bk=bk,
-                            interpret=interpret)
+                            interpret=interpret, banded=banded)
     return out[:, :s_orig].transpose(1, 0, 2)
 
 
@@ -115,11 +116,10 @@ def fedavg_reduce(stacked, weights, *, block: int = 2048,
 
 def fedavg_reduce_tree(stacked_tree, weights, *, interpret: bool | None = None):
     """Pytree convenience: stack clients' trees -> aggregated tree via the
-    Pallas reduction (Eq. 3)."""
-    num_clients = weights.shape[0]
-    like = jax.tree.map(lambda x: x[0], stacked_tree)
-    vecs = jnp.stack([
-        tree_flatten_to_vector(jax.tree.map(lambda x: x[c], stacked_tree))
-        for c in range(num_clients)])
+    Pallas reduction (Eq. 3). The (C, P) matrix is produced by one vmapped
+    tree-ravel, not a per-client Python loop — this is the path the round
+    engines call when ``use_pallas_aggregation`` is set."""
+    like = tree_index(stacked_tree, 0)
+    vecs = tree_ravel_clients(stacked_tree)
     avg = fedavg_reduce(vecs, weights, interpret=interpret)
     return tree_unflatten_from_vector(avg, like)

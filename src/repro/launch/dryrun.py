@@ -130,6 +130,8 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # pre-0.5 jax wraps it in a list
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     mflops = rl.model_flops(cfg, shape, num_chips)
     roof = rl.analyze(cost, hlo, model_flops_per_chip=mflops)

@@ -109,6 +109,16 @@ def tree_flatten_to_vector(tree: PyTree) -> jnp.ndarray:
     return jnp.concatenate([jnp.ravel(x).astype(jnp.float32) for x in leaves])
 
 
+def tree_ravel_clients(stacked_tree: PyTree) -> jnp.ndarray:
+    """Client-stacked tree (leaves (C, ...)) -> (C, P) matrix in one shot.
+
+    A single vmapped ravel over the client axis — the flattening step of
+    the ``fedavg_reduce`` kernel contract. Replaces the per-client Python
+    loop (C separate gather+concatenate chains) with one program.
+    """
+    return jax.vmap(tree_flatten_to_vector)(stacked_tree)
+
+
 def tree_unflatten_from_vector(vec: jnp.ndarray, like: PyTree) -> PyTree:
     leaves, treedef = jax.tree.flatten(like)
     out, off = [], 0

@@ -12,6 +12,8 @@ import pytest
 from repro.configs import ALL_ARCHS, get_arch, smoke_variant
 from repro.models import forward, init_params
 
+pytestmark = pytest.mark.slow  # full-zoo sweep, ~1 min on CPU
+
 B, S, P = 2, 16, 8
 
 

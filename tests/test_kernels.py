@@ -76,6 +76,43 @@ def test_gpo_attention_sweep(s, m, dtype):
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("s,m,b", [
+    (64, 13, 16),    # num_ctx not a multiple of the k-block
+    (257, 16, 32),   # S not a multiple of the block (wrapper pads)
+    (512, 8, 32),    # t >> m: the eval regime the banded grid targets
+    (48, 40, 16),    # context dominates (band covers most of the grid)
+    (33, 1, 16),     # single context point, padded S
+])
+def test_gpo_attention_banded_grid_cases(s, m, b):
+    """Banded grid (ctx band + diagonal k-step) vs the jnp oracle AND the
+    legacy full predicated grid."""
+    key = jax.random.PRNGKey(7)
+    h, hd = 4, 32
+    q = jax.random.normal(key, (s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (s, h, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (s, h, hd))
+    banded = gpo_attention(q, k, v, num_ctx=m, bq=b, bk=b)
+    ref = ref_gpo_attention(
+        q.transpose(1, 0, 2), k.transpose(1, 0, 2),
+        v.transpose(1, 0, 2), num_ctx=m).transpose(1, 0, 2)
+    np.testing.assert_allclose(np.asarray(banded), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    full = gpo_attention(q, k, v, num_ctx=m, bq=b, bk=b, banded=False)
+    np.testing.assert_allclose(np.asarray(banded), np.asarray(full),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gpo_banded_grid_visits_fewer_tiles():
+    """The O(S*m + S) claim at the grid level: tiles visited is
+    num_qb * (ctx_blocks + 1), not num_qb * num_kb."""
+    from repro.kernels.gpo_attention import gpo_tile_counts
+
+    banded, full = gpo_tile_counts(512, 8, 32, 32)
+    assert banded == (512 // 32) * 2  # one ctx block + diagonal step
+    assert full == (512 // 32) ** 2
+    assert banded * 8 == full
+
+
 def test_gpo_attention_matches_module_mask():
     """The kernel's mask must equal core.gpo._np_mask semantics."""
     from repro.core.gpo import _np_mask

@@ -89,6 +89,10 @@ def test_hlo_cost_trip_count_awareness():
     assert 0.95 * expected < totals.flops < 1.2 * expected
     # XLA's own analysis counts the body once — our reason to exist
     xla = jax.jit(f).lower(x, w).compile().cost_analysis()
+    if isinstance(xla, (list, tuple)):  # pre-0.5 jax wraps it in a list
+        xla = xla[0] if xla else {}
+    if "flops" not in xla:  # don't let the undercount claim pass vacuously
+        pytest.skip("cost_analysis() reports no flops on this backend")
     assert xla["flops"] < totals.flops / 5
 
 

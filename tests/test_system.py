@@ -9,11 +9,14 @@ near-1 fairness index; aggregation weights follow Eq. 2.
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import FedConfig, GPOConfig
 from repro.core import CentralizedGPO, FederatedGPO, normalize_weights
 from repro.core.fairness import convergence_round
 from repro.data import SurveyConfig, make_survey_data, split_groups
+
+pytestmark = pytest.mark.slow  # paper-experiment in miniature (40 rounds x2)
 
 
 def test_pluralllm_end_to_end():
