@@ -21,6 +21,12 @@ writes ``BENCH_round.json`` (repo root):
    ratio (the O(S*m + S) claim at the grid level) and wall-clock in the
    t >> m eval regime (interpret mode on CPU).
 
+A fourth section sweeps the server-aggregation registry (DESIGN.md §7)
+— every strategy through the fused scan engine at the paper's round
+structure — and writes ``BENCH_agg.json``: rounds/sec (the aggregation
+subsystem's overhead over plain FedAvg) plus the final alignment score
+and fairness index per strategy (the quality axes the strategies trade).
+
 CPU runtime knobs (set before jax import, override via env): the legacy
 XLA:CPU runtime + single-thread eigen minimise per-op overhead for the
 tiny-op graphs this benchmark times, and the ``rbg`` PRNG keeps key
@@ -51,6 +57,8 @@ import jax.numpy as jnp
 import numpy as np
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_round.json")
+AGG_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_agg.json")
 
 
 def _best_of(fn, reps: int) -> float:
@@ -99,6 +107,66 @@ def bench_round_engine(rounds: int, reps: int = 5) -> dict:
     result["scan_speedup"] = (result["scan_rounds_per_sec"]
                               / result["loop_rounds_per_sec"])
     print(f"round_engine/speedup: {result['scan_speedup']:.2f}x")
+    return result
+
+
+# ---------------------------------------------------------------------------
+# 1b. aggregator sweep: every registry strategy through the scan engine
+# ---------------------------------------------------------------------------
+# hyperparameters chosen so each strategy actually exercises its
+# mechanism (momentum/moments on, nonzero trim/prox/temperature)
+AGG_SWEEP = {
+    "fedavg": {},
+    "fedavgm": {"momentum": 0.9, "server_lr": 1.0},
+    "fedadam": {"beta1": 0.9, "beta2": 0.99, "tau": 1e-2,
+                "server_lr": 1e-2},
+    "fedyogi": {"beta1": 0.9, "beta2": 0.99, "tau": 1e-2,
+                "server_lr": 1e-2},
+    "fedprox": {"prox_mu": 0.01},
+    "trimmed_mean": {"trim_frac": 0.1},
+    "median": {},
+    "adaptive": {"fair_temp": 1.0, "fair_decay": 0.9},
+}
+
+
+def bench_aggregators(rounds: int, reps: int = 3) -> dict:
+    from repro.configs import AggConfig, FedConfig, GPOConfig
+    from repro.core import FederatedGPO
+    from repro.data import SurveyConfig, make_survey_data, split_groups
+
+    data = make_survey_data(SurveyConfig(
+        num_groups=17, num_questions=16, d_embed=4, seed=0))
+    train_groups, eval_groups = split_groups(data, train_frac=0.6, seed=0)
+    gcfg = GPOConfig(d_embed=4, d_model=8, num_layers=1, num_heads=1,
+                     d_ff=16)
+
+    result = {
+        "rounds": rounds,
+        "num_clients": int(len(train_groups)),
+        "local_epochs": 6,
+        "strategies": {},
+    }
+    for name, hp in AGG_SWEEP.items():
+        fcfg = FedConfig(num_clients=len(train_groups), rounds=rounds,
+                         local_epochs=6, eval_every=10, num_context=1,
+                         num_target=1, agg=AggConfig(name=name, **hp))
+        fed = FederatedGPO(gcfg, fcfg, data, train_groups, eval_groups)
+        hist = fed.run(rounds=rounds)  # compile + warm
+        dt = _best_of(lambda: fed.run(rounds=rounds), reps)
+        entry = {
+            "hyperparams": hp,
+            "rounds_per_sec": rounds / dt,
+            "wall_s": dt,
+            "final_loss": hist.round_loss[-1],
+            "final_mean_as": hist.eval_mean_as[-1],
+            "final_fi": hist.eval_fi[-1],
+        }
+        result["strategies"][name] = entry
+        print(f"agg_sweep/{name}: {rounds / dt:,.1f} rounds/s "
+              f"AS={entry['final_mean_as']:.4f} FI={entry['final_fi']:.4f}")
+    base = result["strategies"]["fedavg"]["rounds_per_sec"]
+    for name, entry in result["strategies"].items():
+        entry["throughput_vs_fedavg"] = entry["rounds_per_sec"] / base
     return result
 
 
@@ -210,7 +278,11 @@ def bench_gpo_grid(s: int = 512, m: int = 8, b: int = 32, h: int = 4,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--agg-rounds", type=int, default=100,
+                    help="rounds per strategy in the aggregator sweep")
     ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--skip-agg", action="store_true",
+                    help="skip the aggregator sweep / BENCH_agg.json")
     args = ap.parse_args()
 
     report = {
@@ -224,6 +296,18 @@ def main() -> None:
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {os.path.abspath(OUT_PATH)}")
+
+    if not args.skip_agg:
+        agg_report = {
+            "backend": jax.default_backend(),
+            "xla_flags": os.environ.get("XLA_FLAGS", ""),
+            "prng": "rbg",
+            "agg_sweep": bench_aggregators(args.agg_rounds,
+                                           min(args.reps, 3)),
+        }
+        with open(AGG_OUT_PATH, "w") as f:
+            json.dump(agg_report, f, indent=2)
+        print(f"wrote {os.path.abspath(AGG_OUT_PATH)}")
 
 
 if __name__ == "__main__":

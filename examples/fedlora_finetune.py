@@ -1,10 +1,11 @@
 """Federated fine-tuning of a ~100M-parameter backbone — the end-to-end
 training driver. Four clients hold disjoint synthetic corpora; each round
-runs local LM steps and FedAvg-aggregates either full parameters or LoRA
-adapters (the paper's technique applied to backbone training).
+runs local LM steps and aggregates either full parameters or LoRA
+adapters (the paper's technique applied to backbone training) under any
+registry aggregation strategy (DESIGN.md §7).
 
   PYTHONPATH=src python examples/fedlora_finetune.py --rounds 150 \
-      --local-steps 2 --mode lora
+      --local-steps 2 --mode lora --agg fedavgm
 """
 import argparse
 import time
@@ -13,11 +14,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_arch, override
+from repro.configs import AggConfig, get_arch, override
 from repro.core import (
+    AGGREGATORS,
     broadcast_to_clients,
     init_lora,
     lora_param_count,
+    make_aggregator,
     make_backbone_fedavg_round,
     make_fedlora_round,
     normalize_weights,
@@ -45,6 +48,12 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--mode", choices=["full", "lora"], default="lora")
+    # fedprox is excluded: its proximal term lives in the GPO engine's
+    # local objective, which these backbone trainers don't have
+    ap.add_argument("--agg", default="fedavg",
+                    choices=[n for n in AGGREGATORS.names()
+                             if n != "fedprox"],
+                    help="server-aggregation strategy (DESIGN.md §7)")
     args = ap.parse_args()
 
     cfg = hundred_m_config()
@@ -61,18 +70,22 @@ def main() -> None:
         vocab_size=cfg.vocab_size, seq_len=args.seq,
         global_batch=args.batch, seed=10 + i)) for i in range(c)]
 
+    agg = make_aggregator(AggConfig(name=args.agg), num_clients=c)
     if args.mode == "full":
         payload = params
-        rnd = jax.jit(make_backbone_fedavg_round(cfg, opt, args.local_steps))
+        rnd = jax.jit(make_backbone_fedavg_round(cfg, opt, args.local_steps,
+                                                 agg=agg))
     else:
         payload = init_lora(params, key, rank=8)
         print(f"LoRA payload: {lora_param_count(payload)/1e6:.2f}M params "
               f"({100*lora_param_count(payload)/count_params(cfg):.2f}% of "
               "the backbone) — the federated communication volume")
-        rnd = jax.jit(make_fedlora_round(cfg, params, opt, args.local_steps))
+        rnd = jax.jit(make_fedlora_round(cfg, params, opt, args.local_steps,
+                                         agg=agg))
 
     client_state = broadcast_to_clients(payload, c)
     opt_states = jax.vmap(opt.init)(client_state)
+    server_state = agg.init(payload)
 
     t0 = time.time()
     total_steps = 0
@@ -82,8 +95,8 @@ def main() -> None:
             *[jax.tree.map(lambda *ys: jnp.stack(ys),
                            *[next(iters[i]) for _ in range(args.local_steps)])
               for i in range(c)])
-        client_state, opt_states, losses = rnd(client_state, opt_states,
-                                               batches, weights)
+        client_state, opt_states, losses, server_state = rnd(
+            client_state, opt_states, batches, weights, server_state)
         total_steps += c * args.local_steps
         if r % max(1, args.rounds // 15) == 0:
             print(f"round {r:4d} ({total_steps:5d} client steps) "

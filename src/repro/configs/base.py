@@ -179,6 +179,51 @@ class GPOConfig:
 
 
 @dataclass(frozen=True)
+class AggConfig:
+    """Server-aggregation strategy (DESIGN.md §7).
+
+    The paper's Eq. 2-3 FedAvg is ``name="fedavg"`` with the defaults
+    below. Every other strategy consumes the same client payload — the
+    parameter *delta* each client produced this round — and differs only
+    in the stateful server update applied to the weighted delta moment
+    (momentum / Adam / Yogi), in the reduction itself (rank-trimmed mean,
+    coordinate-wise median), or in how the per-group weights are formed
+    (APPA-style fairness-adaptive weights). ``prox_mu`` is the one
+    client-side knob: a FedProx proximal term added to the local
+    objective, independent of the server rule.
+    """
+
+    # registry name: fedavg | fedavgm | fedadam | fedyogi | fedprox |
+    # trimmed_mean | median | adaptive  (repro.core.aggregation)
+    name: str = "fedavg"
+    # server learning rate on the aggregated delta (1.0 == paper FedAvg)
+    server_lr: float = 1.0
+    # fedavgm: server momentum on the delta moment (0.0 degenerates to
+    # fedavg exactly)
+    momentum: float = 0.9
+    # fedadam / fedyogi (Reddi et al. 2021): first/second-moment decays
+    # and the adaptivity floor tau. (beta1=0, beta2=1, tau=1) degenerates
+    # to fedavg exactly (v stays 0, the update is delta / (0 + 1)).
+    beta1: float = 0.9
+    beta2: float = 0.99
+    tau: float = 1e-3
+    # fedprox client-side proximal coefficient mu: local loss grows
+    # (mu/2) * ||theta - theta_global||^2. 0.0 == plain local Adam.
+    prox_mu: float = 0.0
+    # trimmed_mean: fraction of clients trimmed at EACH end of the
+    # per-coordinate ranking (k = floor(frac * C), clamped to 2k < C).
+    # 0.0 degenerates to the weighted mean exactly.
+    trim_frac: float = 0.1
+    # adaptive (APPA-style): per-group weights  w_g ∝ p_g * exp(temp *
+    # (score_g - mean score))  where score_g is an EMA of the group's
+    # local loss — groups the global model serves worst get upweighted,
+    # driving the fairness-index metric. temp=0.0 degenerates to the
+    # dataset-size weights exactly.
+    fair_temp: float = 1.0
+    fair_decay: float = 0.9
+
+
+@dataclass(frozen=True)
 class FedConfig:
     """PluralLLM federated runtime (paper §3.1–3.2, §4.3)."""
 
@@ -204,11 +249,14 @@ class FedConfig:
     # unroll factor for the fused scan driver (lax.scan unroll): trades
     # compile time for less per-round loop machinery. 1 = no unroll.
     scan_unroll: int = 1
-    # aggregate with the Pallas fedavg_reduce kernel on the flattened
-    # (C, P) client matrix instead of the per-leaf jnp weighted sum
-    # (Eq. 3 either way; see DESIGN.md §4). Applies to both the vmapped
-    # and the shard_map engines.
+    # aggregate with the Pallas reduction kernels on the flattened
+    # (C, P) client-delta matrix instead of the per-leaf jnp reductions
+    # (same math either way; see DESIGN.md §4, §7). Applies to both the
+    # vmapped and the shard_map engines.
     use_pallas_aggregation: bool = False
+    # server-aggregation strategy (DESIGN.md §7); the default AggConfig
+    # is the paper's Eq. 2-3 FedAvg.
+    agg: AggConfig = AggConfig()
     seed: int = 0
 
 

@@ -14,6 +14,12 @@ from repro.core.fedavg import (  # noqa: F401
     fedavg_stacked,
     normalize_weights,
 )
+from repro.core.aggregation import (  # noqa: F401
+    AGGREGATORS,
+    AggState,
+    ServerAggregator,
+    make_aggregator,
+)
 from repro.core.federated import FederatedGPO, History, make_sharded_round  # noqa: F401
 from repro.core.centralized import CentralizedGPO  # noqa: F401
 from repro.core import fairness  # noqa: F401

@@ -9,6 +9,11 @@
    ('pod', 'data').
 3. ``fedavg_flat`` — flattened-vector form matching the ``fedavg_reduce``
    Pallas kernel contract (used by kernel tests and benchmarks).
+
+These are the Eq. 2-3 *primitives*; the pluggable server-aggregation
+subsystem that generalizes them (delta contract, FedAvgM/FedAdam/
+FedYogi, robust trims, adaptive weights) lives in ``core/aggregation.py``
+(DESIGN.md §7).
 """
 from __future__ import annotations
 

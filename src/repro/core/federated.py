@@ -4,9 +4,13 @@ Round structure (faithful to the paper):
   1. server broadcasts global GPO params to all training clients (groups);
   2. every client runs ``local_epochs`` Adam steps; each step samples
      context questions + target questions from the client's private
-     preference data (in-context objective, Eq. 1);
-  3. clients transmit parameters; the server aggregates with
-     dataset-size weights p_g (Eq. 2-3) and redistributes.
+     preference data (in-context objective, Eq. 1; with
+     ``AggConfig.prox_mu > 0`` a FedProx proximal term anchors the local
+     model to the round's broadcast global);
+  3. clients transmit parameter *deltas*; the server reduces them and
+     applies the configured ``ServerAggregator`` update (DESIGN.md §7 —
+     the paper's Eq. 2-3 FedAvg is the default strategy) and
+     redistributes.
 
 Two execution engines expose the same round semantics:
 
@@ -45,19 +49,21 @@ import numpy as np
 
 from repro.configs.base import FedConfig, GPOConfig
 from repro.core import fairness
+from repro.core.aggregation import ServerAggregator, make_aggregator
 from repro.core.fedavg import (
     broadcast_to_clients,
     fedavg_allreduce,
-    fedavg_stacked,
     normalize_weights,
 )
 from repro.core.gpo import gpo_loss, init_gpo_params, predict_preferences
 from repro.data.surveys import SurveyData, sample_icl_batch
-from repro.kernels import fedavg_reduce, fedavg_reduce_tree
+from repro.kernels import fedavg_reduce
 from repro.optim import adam
 from repro.utils.pytree import (
     tree_index,
     tree_ravel_clients,
+    tree_sq_norm,
+    tree_sub,
     tree_unflatten_from_vector,
 )
 
@@ -69,14 +75,33 @@ PyTree = Any
 # ---------------------------------------------------------------------------
 def _make_local_train(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
                       data: SurveyData, opt):
+    """Local client objective. With ``AggConfig.prox_mu > 0`` the FedProx
+    proximal term (mu/2)*||theta - theta_global||^2 anchors each local
+    step to the round's broadcast global (= the entry params); the
+    reported loss stays the task loss so strategies compare on Eq. 1.
+    The mu == 0 path traces byte-identical to the seed objective."""
+    mu = fed_cfg.agg.prox_mu
+
     def local_train(params, opt_state, key, group_id):
+        anchor = params  # the round's broadcast global model
+
         def epoch_step(carry, k):
             params, opt_state = carry
             batch = sample_icl_batch(k, data, group_id,
                                      fed_cfg.num_context, fed_cfg.num_target)
-            loss, grads = jax.value_and_grad(gpo_loss)(
-                params, gpo_cfg, batch.ctx_x, batch.ctx_y, batch.tgt_x,
-                batch.tgt_y)
+            if mu > 0.0:
+                def objective(p):
+                    task = gpo_loss(p, gpo_cfg, batch.ctx_x, batch.ctx_y,
+                                    batch.tgt_x, batch.tgt_y)
+                    prox = 0.5 * mu * tree_sq_norm(tree_sub(p, anchor))
+                    return task + prox, task
+
+                (_, loss), grads = jax.value_and_grad(
+                    objective, has_aux=True)(params)
+            else:
+                loss, grads = jax.value_and_grad(gpo_loss)(
+                    params, gpo_cfg, batch.ctx_x, batch.ctx_y, batch.tgt_x,
+                    batch.tgt_y)
             params, opt_state = opt.update(grads, opt_state, params)
             return (params, opt_state), loss
 
@@ -125,9 +150,13 @@ class FederatedGPO:
         self.eval_groups = jnp.asarray(eval_groups, jnp.int32)
         self.weights = normalize_weights(data.sizes[self.train_groups])
         self.opt = adam(fed_cfg.lr)
+        self.agg = make_aggregator(
+            fed_cfg.agg, num_clients=len(train_groups),
+            use_pallas=fed_cfg.use_pallas_aggregation)
 
         key = jax.random.PRNGKey(fed_cfg.seed)
         self.global_params = init_gpo_params(gpo_cfg, key)
+        self.server_state = self.agg.init(self.global_params)
         per_client = broadcast_to_clients(self.global_params,
                                           len(train_groups))
         self.opt_states = jax.vmap(self.opt.init)(per_client)
@@ -141,7 +170,9 @@ class FederatedGPO:
         m = fed_cfg.batch_groups or num_clients
         m = min(m, num_clients)
 
-        def round_step(global_params, opt_states, key):
+        agg = self.agg
+
+        def round_step(global_params, opt_states, server_state, key):
             k_sub, k_train = jax.random.split(key)
             if m < num_clients:
                 idx = jax.random.choice(k_sub, num_clients, (m,),
@@ -157,16 +188,19 @@ class FederatedGPO:
             else:
                 opt_sub = jax.tree.map(lambda x: x[idx], opt_states)
             keys = jax.random.split(k_train, m)
-            client_params, opt_sub, losses = jax.vmap(local_train)(
+            new_client_params, opt_sub, losses = jax.vmap(local_train)(
                 client_params, opt_sub, keys, groups)
             opt_states = jax.tree.map(
                 lambda full, sub: full.at[idx].set(sub), opt_states,
                 opt_sub)
-            if fed_cfg.use_pallas_aggregation:
-                new_global = fedavg_reduce_tree(client_params, w)
-            else:
-                new_global = fedavg_stacked(client_params, w)
-            return new_global, opt_states, losses
+            # delta contract (DESIGN.md §7): clients ship theta_g - theta;
+            # the server reduces over the client axis and applies its
+            # stateful update (Eq. 3 FedAvg being the default strategy).
+            deltas = tree_sub(new_client_params, client_params)
+            new_global, server_state = agg.step(
+                server_state, global_params, deltas, w, losses=losses,
+                idx=idx)
+            return new_global, opt_states, server_state, losses
 
         def eval_fn(global_params, key):
             keys = jax.random.split(key, len(eval_groups))
@@ -182,24 +216,29 @@ class FederatedGPO:
         # on device and the block performs exactly one host transfer.
         # Only the per-client optimizer buffers are donated: callers (and
         # the seed tests) legitimately hold references to the previous
-        # global model across ``run`` calls.
+        # global model across ``run`` calls. The server-aggregator state
+        # (momentum / moments / adaptive scores) rides in the scan carry
+        # so stateful strategies fuse exactly like stateless FedAvg.
         @functools.partial(jax.jit, donate_argnums=(1,))
-        def block_fn(global_params, opt_states, key, eval_mask):
+        def block_fn(global_params, opt_states, server_state, key,
+                     eval_mask):
             def body(carry, do_eval):
-                g, opt_s, k = carry
+                g, opt_s, srv, k = carry
                 k, k_round, k_eval = jax.random.split(k, 3)
-                g, opt_s, losses = round_step(g, opt_s, k_round)
+                g, opt_s, srv, losses = round_step(g, opt_s, srv, k_round)
                 scores = jax.lax.cond(
                     do_eval,
                     lambda gp, ke: eval_fn(gp, ke).astype(jnp.float32),
                     lambda gp, ke: jnp.zeros((num_eval,), jnp.float32),
                     g, k_eval)
-                return (g, opt_s, k), (jnp.mean(losses), scores)
+                return (g, opt_s, srv, k), (jnp.mean(losses), scores)
 
-            (global_params, opt_states, key), (losses, scores) = jax.lax.scan(
-                body, (global_params, opt_states, key), eval_mask,
-                unroll=fed_cfg.scan_unroll)
-            return global_params, opt_states, key, losses, scores
+            ((global_params, opt_states, server_state, key),
+             (losses, scores)) = jax.lax.scan(
+                body, (global_params, opt_states, server_state, key),
+                eval_mask, unroll=fed_cfg.scan_unroll)
+            return (global_params, opt_states, server_state, key, losses,
+                    scores)
 
         self._round = jax.jit(round_step)
         self._eval = jax.jit(eval_fn)
@@ -257,9 +296,10 @@ class FederatedGPO:
         for start in range(0, full_end, chunk):
             mask = eval_mask[start:start + chunk]
             try:
-                (self.global_params, self.opt_states, key, losses,
-                 scores) = self._block(self.global_params, self.opt_states,
-                                       key, jnp.asarray(mask))
+                (self.global_params, self.opt_states, self.server_state,
+                 key, losses, scores) = self._block(
+                    self.global_params, self.opt_states, self.server_state,
+                    key, jnp.asarray(mask))
             except BaseException:
                 self._recover_donated_opt_states()
                 raise
@@ -280,8 +320,9 @@ class FederatedGPO:
         driver and the scan driver's sub-chunk tail. Returns the carried
         key (chain identical to one scan step)."""
         key, k_round, k_eval = jax.random.split(key, 3)
-        self.global_params, self.opt_states, losses = self._round(
-            self.global_params, self.opt_states, k_round)
+        (self.global_params, self.opt_states, self.server_state,
+         losses) = self._round(self.global_params, self.opt_states,
+                               self.server_state, k_round)
         hist.round_loss.append(float(jnp.mean(losses)))
         if eval_mask[r]:
             scores = np.asarray(self._eval(self.global_params, k_eval))
@@ -316,49 +357,91 @@ class FederatedGPO:
 # ---------------------------------------------------------------------------
 def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
                        data: SurveyData, mesh, client_axes=("data",),
-                       opt=None) -> Callable:
-    """Returns round_fn(client_params, opt_states, keys, group_ids, weights)
-    with every argument carrying a leading *global* client axis sharded over
-    ``client_axes``. Aggregation = ONE weighted psum over those axes —
-    the virtualized server. Multi-pod: client_axes=("pod", "data") gives
-    hierarchical FedAvg.
+                       opt=None, agg: ServerAggregator | None = None
+                       ) -> Callable:
+    """Returns round_fn(client_params, opt_states, keys, group_ids,
+    weights, server_state) -> (client_params, opt_states, losses,
+    server_state).
+
+    Client-carrying arguments have a leading *global* client axis sharded
+    over ``client_axes``; ``server_state`` is replicated (every shard
+    applies the same deterministic server update, DESIGN.md §7).
+    Linear strategies reduce the client deltas with ONE weighted psum
+    over those axes — the virtualized server; robust strategies
+    all-gather the flattened delta shard and rank-trim locally (order
+    statistics do not decompose into a psum). Multi-pod:
+    client_axes=("pod", "data") gives hierarchical aggregation.
+    For ``adaptive``, effective per-group weights are formed OUTSIDE the
+    shard_map from the replicated scores (they need a normalization over
+    all clients), so the mapped body stays collective-minimal.
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
     opt = opt or adam(fed_cfg.lr)
+    if agg is None:
+        agg = make_aggregator(fed_cfg.agg, num_clients=fed_cfg.num_clients,
+                              use_pallas=fed_cfg.use_pallas_aggregation)
     local_train = _make_local_train(gpo_cfg, fed_cfg, data, opt)
     axes = tuple(client_axes)
     spec = P(axes)
+    repl = P()
 
-    def round_body(client_params, opt_states, keys, group_ids, weights):
+    def round_body(client_params, opt_states, keys, group_ids, weights,
+                   server_state):
         # local shard: (C_local, ...) clients; train without collectives
         new_params, new_opt, losses = jax.vmap(local_train)(
             client_params, opt_states, keys, group_ids)
-        # Eq. 3: weighted psum over the client axes == aggregation server.
-        if fed_cfg.use_pallas_aggregation:
-            # flatten the local client shard to (C_local, P) in one
-            # vmapped ravel, reduce it with the Pallas kernel, then ONE
-            # psum of the flat vector plays the aggregation server.
-            vecs = tree_ravel_clients(new_params)
-            local_vec = fedavg_reduce(vecs, weights.astype(jnp.float32))
-            global_vec = jax.lax.psum(local_vec, axes)
-            global_params = tree_unflatten_from_vector(
-                global_vec, tree_index(new_params, 0))
+        # delta contract: entry params ARE the replicated global model
+        deltas = tree_sub(new_params, client_params)
+        global_prev = tree_index(client_params, 0)
+        if agg.linear:
+            if fed_cfg.use_pallas_aggregation:
+                # flatten the local client-delta shard to (C_local, P) in
+                # one vmapped ravel, reduce it with the Pallas delta-
+                # moment kernel, then ONE psum of the flat vector plays
+                # the aggregation server.
+                vecs = tree_ravel_clients(deltas)
+                local_vec = fedavg_reduce(vecs, weights.astype(jnp.float32))
+                delta_vec = jax.lax.psum(local_vec, axes)
+                delta = tree_unflatten_from_vector(delta_vec, global_prev)
+            else:
+                local_weighted = jax.tree.map(
+                    lambda x: jnp.sum(
+                        x.astype(jnp.float32)
+                        * weights.reshape((-1,) + (1,) * (x.ndim - 1)),
+                        axis=0),
+                    deltas)
+                delta = fedavg_allreduce(
+                    local_weighted, jnp.asarray(1.0, jnp.float32), axes)
         else:
-            local_weighted = jax.tree.map(
-                lambda x: jnp.sum(
-                    x.astype(jnp.float32)
-                    * weights.reshape((-1,) + (1,) * (x.ndim - 1)), axis=0),
-                new_params)
-            global_params = fedavg_allreduce(
-                local_weighted, jnp.asarray(1.0, jnp.float32), axes)
+            # robust reduce needs every client's delta: all-gather the
+            # flat (C_local, P) shard to (C, P), rank-trim locally.
+            vecs = tree_ravel_clients(deltas)
+            all_vecs = jax.lax.all_gather(vecs, axes, axis=0, tiled=True)
+            all_w = jax.lax.all_gather(weights, axes, axis=0, tiled=True)
+            delta = tree_unflatten_from_vector(
+                agg.reduce_flat(all_vecs, all_w), global_prev)
+        all_losses = (jax.lax.all_gather(losses, axes, axis=0, tiled=True)
+                      if agg.needs_losses else None)
+        # replicated server update: same inputs on every shard -> same
+        # global model and state, no second parameter-sized collective.
+        global_params, server_state = agg.apply(
+            server_state, global_prev, delta, losses=all_losses, idx=None)
         # redistribute: every client's next-round start is the global model
         c_local = keys.shape[0]
         client_params = broadcast_to_clients(global_params, c_local)
-        return client_params, new_opt, losses
+        return client_params, new_opt, losses, server_state
 
-    in_specs = (spec, spec, spec, spec, spec)
-    out_specs = (spec, spec, spec)
-    return shard_map(round_body, mesh=mesh, in_specs=in_specs,
-                     out_specs=out_specs, check_rep=False)
+    in_specs = (spec, spec, spec, spec, spec, repl)
+    out_specs = (spec, spec, spec, repl)
+    sharded = shard_map(round_body, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
+
+    def round_fn(client_params, opt_states, keys, group_ids, weights,
+                 server_state):
+        weights = agg.weigh(server_state, weights, None)
+        return sharded(client_params, opt_states, keys, group_ids, weights,
+                       server_state)
+
+    return round_fn

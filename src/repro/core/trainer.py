@@ -24,12 +24,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.aggregation import ServerAggregator
 from repro.core.fedavg import broadcast_to_clients, fedavg_stacked
 from repro.core.lora import apply_lora
 from repro.models import forward
 from repro.models.layers import cross_entropy_loss
 from repro.optim import Optimizer
-from repro.utils.pytree import tree_zeros_like
+from repro.utils.pytree import tree_index, tree_sub, tree_zeros_like
 
 PyTree = Any
 
@@ -132,15 +133,68 @@ def greedy_decode(cfg: ModelConfig, params, cache, first_token, start_pos,
 # ---------------------------------------------------------------------------
 # Federated backbone training (the paper's technique as a trainer feature)
 # ---------------------------------------------------------------------------
+def _aggregated_round(local_train: Callable,
+                      agg: Optional[ServerAggregator]) -> Callable:
+    """Shared round tail for the backbone/LoRA federated trainers.
+
+    ``agg=None`` keeps the seed contract: (client_payload, opt_states,
+    batches, weights) -> (payload, opt_states, losses) with Eq. 3
+    aggregation. With a ``ServerAggregator`` the delta contract of
+    DESIGN.md §7 applies — the round takes/returns the server state:
+    (payload, opt_states, batches, weights, server_state) ->
+    (payload, opt_states, losses, server_state).
+    """
+    if agg is None:
+        def round_fn(client_payload, opt_states, batches, weights):
+            client_payload, opt_states, losses = jax.vmap(local_train)(
+                client_payload, opt_states, batches)
+            global_payload = fedavg_stacked(client_payload, weights)
+            num_clients = weights.shape[0]
+            return (broadcast_to_clients(global_payload, num_clients),
+                    opt_states, losses)
+
+        return round_fn
+
+    if agg.cfg.prox_mu > 0.0:
+        # the proximal term lives in the local objective, which for the
+        # backbone/LoRA trainers is the plain LM loss — failing loudly
+        # beats silently benchmarking "FedProx" that is really FedAvg
+        raise ValueError(
+            "prox_mu > 0 is only wired into the GPO engine's local "
+            "objective (federated._make_local_train); the backbone/LoRA "
+            "trainers do not apply a proximal term")
+
+    def round_fn(client_payload, opt_states, batches, weights,
+                 server_state):
+        new_payload, opt_states, losses = jax.vmap(local_train)(
+            client_payload, opt_states, batches)
+        # entry payload is the replicated global from the last round
+        deltas = tree_sub(new_payload, client_payload)
+        global_prev = tree_index(client_payload, 0)
+        global_payload, server_state = agg.step(
+            server_state, global_prev, deltas, weights, losses=losses,
+            idx=None)
+        num_clients = weights.shape[0]
+        return (broadcast_to_clients(global_payload, num_clients),
+                opt_states, losses, server_state)
+
+    return round_fn
+
+
 def make_backbone_fedavg_round(cfg: ModelConfig, opt: Optimizer,
-                               local_steps: int) -> Callable:
-    """Full-parameter FedAvg over backbones (feasible <= few-B params).
+                               local_steps: int,
+                               agg: Optional[ServerAggregator] = None
+                               ) -> Callable:
+    """Full-parameter federated round over backbones (feasible <= few-B
+    params).
 
     (client_params (C, ...), opt_states, batches (C, local_steps, ...),
      weights (C,)) -> (new client params, opt_states, mean loss per client).
-    One round = local_steps LM steps per client + Eq. 3 aggregation +
-    redistribution. vmap engine (tests/CPU); the launcher swaps in the
-    shard_map engine with the same body.
+    One round = local_steps LM steps per client + aggregation +
+    redistribution (Eq. 3 FedAvg by default; any registry strategy via
+    ``agg``, which adds a server_state argument/result — see
+    ``_aggregated_round``). vmap engine (tests/CPU); the launcher swaps
+    in the shard_map engine with the same body.
     """
     step = make_train_step(cfg, opt)
 
@@ -154,21 +208,16 @@ def make_backbone_fedavg_round(cfg: ModelConfig, opt: Optimizer,
             body, (params, opt_state), batches)
         return params, opt_state, jnp.mean(losses)
 
-    def round_fn(client_params, opt_states, batches, weights):
-        client_params, opt_states, losses = jax.vmap(local_train)(
-            client_params, opt_states, batches)
-        global_params = fedavg_stacked(client_params, weights)
-        num_clients = weights.shape[0]
-        return (broadcast_to_clients(global_params, num_clients),
-                opt_states, losses)
-
-    return round_fn
+    return _aggregated_round(local_train, agg)
 
 
 def make_fedlora_round(cfg: ModelConfig, frozen_params, opt: Optimizer,
-                       local_steps: int) -> Callable:
-    """FedAvg over LoRA adapters with a frozen (shared) backbone — the
-    production recipe for grok-1-class archs (DESIGN.md §3)."""
+                       local_steps: int,
+                       agg: Optional[ServerAggregator] = None) -> Callable:
+    """Federated LoRA adapters with a frozen (shared) backbone — the
+    production recipe for grok-1-class archs (DESIGN.md §3). The adapter
+    tree is a plain pytree, so every registry aggregation strategy
+    applies to it unchanged (``agg``; see ``_aggregated_round``)."""
 
     def loss_fn(lora, batch):
         eff = apply_lora(frozen_params, lora)
@@ -185,12 +234,4 @@ def make_fedlora_round(cfg: ModelConfig, frozen_params, opt: Optimizer,
             body, (lora, opt_state), batches)
         return lora, opt_state, jnp.mean(losses)
 
-    def round_fn(client_lora, opt_states, batches, weights):
-        client_lora, opt_states, losses = jax.vmap(local_train)(
-            client_lora, opt_states, batches)
-        global_lora = fedavg_stacked(client_lora, weights)
-        num_clients = weights.shape[0]
-        return (broadcast_to_clients(global_lora, num_clients),
-                opt_states, losses)
-
-    return round_fn
+    return _aggregated_round(local_train, agg)

@@ -1,7 +1,10 @@
 # Pallas TPU kernels for the compute hot spots: flash attention (backbone),
 # GPO neural-process attention (the paper's module), Mamba2 SSD scan, and
-# the FedAvg weighted reduction (the paper's aggregation, Eq. 3).
+# the server-aggregation reductions (Eq. 3 FedAvg plus the generalized
+# delta-moment and rank-trim kernels, DESIGN.md §7).
 from repro.kernels.ops import (  # noqa: F401
+    agg_momentum_reduce,
+    agg_trimmed_reduce,
     fedavg_reduce,
     fedavg_reduce_tree,
     flash_attention,

@@ -1,0 +1,140 @@
+"""Generalized server-aggregation Pallas kernels (DESIGN.md §7).
+
+``fedavg_reduce`` (Eq. 3 as a weighted reduction over the flattened
+(C, P) client-delta matrix) generalizes into two kernels:
+
+1. ``momentum_reduce_flat`` — the weighted delta-moment kernel: one pass
+   over the (C, bp) tile produces BOTH the weighted first moment
+   Delta[p] = sum_c w[c] * d_c[p] and the updated server-momentum buffer
+   m'[p] = beta * m[p] + Delta[p] (FedAvgM; beta=0 returns Delta in both
+   outputs, i.e. plain FedAvg). Fusing the momentum update into the
+   reduction keeps the kernel bandwidth-bound at the same arithmetic
+   intensity: the (1, bp) momentum tile rides along with the (C, bp)
+   client stream, so the extra state costs 2/C of the traffic instead of
+   a second kernel launch + round trip.
+2. ``trimmed_reduce_flat`` — the client-axis sort/trim kernel for the
+   robust aggregators: per coordinate, clients are ranked (stable, ties
+   broken by client index — exactly a stable argsort), the k lowest and
+   k highest are dropped, and the survivors' weighted mean (weights
+   renormalized over the survivors) is emitted. ``median`` is the
+   maximal trim k = (C-1)//2. Ranks are computed with C predicated
+   (C, bp) compare-reduce passes (C is the client axis — tens, not
+   thousands), so no on-chip sort network is needed and VMEM holds only
+   the streamed tile plus two (1, bp) accumulators.
+
+Both kernels share the tiling of ``fedavg_reduce``: the grid walks the
+flattened parameter axis, weights sit in an SMEM-resident (C, 1) tile,
+and each tile streams HBM once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.backend import interpret_default
+
+DEFAULT_BLOCK = 2048
+
+
+def _pad_cols(x: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
+    p = x.shape[-1]
+    pad = (-p) % block
+    if pad:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+        x = jnp.pad(x, widths)
+    return x, p + pad
+
+
+def _moment_kernel(beta, w_ref, x_ref, m_ref, d_ref, nm_ref):
+    w = w_ref[...].astype(jnp.float32)  # (C, 1)
+    x = x_ref[...].astype(jnp.float32)  # (C, bp)
+    d = jnp.sum(w * x, axis=0, keepdims=True)  # (1, bp)
+    nm = beta * m_ref[...].astype(jnp.float32) + d
+    d_ref[...] = d.astype(d_ref.dtype)
+    nm_ref[...] = nm.astype(nm_ref.dtype)
+
+
+def momentum_reduce_flat(stacked: jnp.ndarray, weights: jnp.ndarray,
+                         moment: jnp.ndarray, *, beta: float,
+                         block: int = DEFAULT_BLOCK,
+                         interpret: bool | None = None
+                         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """stacked (C, P) deltas, weights (C,), moment (P,) ->
+    (delta (P,), new_moment (P,)) with new_moment = beta*moment + delta."""
+    if interpret is None:
+        interpret = interpret_default()
+    c, p = stacked.shape
+    stacked, pp = _pad_cols(stacked, block)
+    m2, _ = _pad_cols(moment.reshape(1, -1).astype(jnp.float32), block)
+    nb = pp // block
+    w2 = weights.reshape(c, 1).astype(jnp.float32)
+
+    d, nm = pl.pallas_call(
+        functools.partial(_moment_kernel, beta),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((c, 1), lambda i: (0, 0)),
+            pl.BlockSpec((c, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, pp), stacked.dtype),
+            jax.ShapeDtypeStruct((1, pp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w2, stacked, m2)
+    return d[0, :p], nm[0, :p]
+
+
+def _trim_kernel(k, w_ref, x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # (C, bp)
+    w = w_ref[...].astype(jnp.float32)  # (C, 1)
+    c = x.shape[0]
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    num = jnp.zeros((1, x.shape[1]), jnp.float32)
+    den = jnp.zeros((1, x.shape[1]), jnp.float32)
+    for ci in range(c):  # static unroll over the (small) client axis
+        xc = x[ci:ci + 1, :]  # (1, bp)
+        # stable rank of client ci per coordinate: strictly-smaller
+        # values, plus equal values from lower client indices
+        before = (x < xc) | ((x == xc) & (row_ids < ci))
+        rank = jnp.sum(before.astype(jnp.int32), axis=0, keepdims=True)
+        keep = ((rank >= k) & (rank < c - k)).astype(jnp.float32)
+        num += keep * w[ci, 0] * xc
+        den += keep * w[ci, 0]
+    o_ref[...] = (num / den).astype(o_ref.dtype)
+
+
+def trimmed_reduce_flat(stacked: jnp.ndarray, weights: jnp.ndarray, *,
+                        trim: int, block: int = DEFAULT_BLOCK,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """stacked (C, P) deltas, weights (C,) -> (P,): per-coordinate
+    rank-trimmed weighted mean, ``trim`` clients dropped at each end."""
+    if interpret is None:
+        interpret = interpret_default()
+    c, p = stacked.shape
+    if not 0 <= 2 * trim < c:
+        raise ValueError(f"trim={trim} must satisfy 0 <= 2*trim < C={c}")
+    stacked, pp = _pad_cols(stacked, block)
+    nb = pp // block
+    w2 = weights.reshape(c, 1).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_trim_kernel, trim),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((c, 1), lambda i: (0, 0)),
+            pl.BlockSpec((c, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, pp), stacked.dtype),
+        interpret=interpret,
+    )(w2, stacked)
+    return out[0, :p]

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import interpret_default
+
 NEG_INF = -1e30
 DEFAULT_BQ = 128
 DEFAULT_BK = 128
@@ -88,11 +90,15 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
                          softcap: float | None = None,
                          bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
-                         interpret: bool = True):
+                         interpret: bool | None = None):
     """q (B, H, S, hd); k/v (B, KV, S, hd) -> (B, H, S, hd).
 
     S must be a multiple of the block sizes (ops.flash_attention pads).
+    ``interpret`` defaults to the backend (interpret on CPU, native on
+    TPU) so direct callers never silently run interpret mode on hardware.
     """
+    if interpret is None:
+        interpret = interpret_default()
     b, h, s, hd = q.shape
     kv = k.shape[1]
     assert h % kv == 0, (h, kv)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import interpret_default
+
 NEG_INF = -1e30
 
 
@@ -145,13 +147,17 @@ def gpo_tile_counts(s: int, num_ctx: int, bq: int, bk: int) -> tuple[int, int]:
 
 
 def gpo_attention_hsd(q, k, v, *, num_ctx: int, bq: int = 128, bk: int = 128,
-                      interpret: bool = True, banded: bool = True):
+                      interpret: bool | None = None, banded: bool = True):
     """q, k, v (H, S, hd) -> (H, S, hd) with the neural-process mask.
 
     S must be a multiple of the block sizes (ops.gpo_attention pads). The
     banded grid requires bq == bk (the wrapper falls back to the full
-    grid otherwise).
+    grid otherwise). ``interpret`` defaults to the backend (interpret on
+    CPU, native on TPU) so direct callers never silently run interpret
+    mode on hardware.
     """
+    if interpret is None:
+        interpret = interpret_default()
     h, s, hd = q.shape
     assert s % bq == 0 and s % bk == 0, (s, bq, bk)
     num_qb, num_kb = s // bq, s // bk

@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.agg_reduce import momentum_reduce_flat, trimmed_reduce_flat
 from repro.kernels.backend import interpret_default as _interpret_default
 from repro.kernels.fedavg_reduce import fedavg_reduce_flat
 from repro.kernels.flash_attention import flash_attention_bhsd
@@ -112,6 +113,30 @@ def fedavg_reduce(stacked, weights, *, block: int = 2048,
         interpret = _interpret_default()
     return fedavg_reduce_flat(stacked, weights, block=block,
                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "block", "interpret"))
+def agg_momentum_reduce(stacked, weights, moment, *, beta: float,
+                        block: int = 2048, interpret: bool | None = None):
+    """stacked (C, P) client deltas, weights (C,), moment (P,) ->
+    (weighted delta moment (P,), beta*moment + delta (P,)) in one fused
+    pass (the FedAvgM server update; DESIGN.md §7)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return momentum_reduce_flat(stacked, weights, moment, beta=beta,
+                                block=block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("trim", "block", "interpret"))
+def agg_trimmed_reduce(stacked, weights, *, trim: int, block: int = 2048,
+                       interpret: bool | None = None):
+    """stacked (C, P) client deltas, weights (C,) -> (P,): rank-trimmed
+    weighted mean over the client axis (trim clients cut at each end;
+    trim=(C-1)//2 is the coordinate-wise median)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return trimmed_reduce_flat(stacked, weights, trim=trim, block=block,
+                               interpret=interpret)
 
 
 def fedavg_reduce_tree(stacked_tree, weights, *, interpret: bool | None = None):

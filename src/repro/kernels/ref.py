@@ -75,3 +75,27 @@ def ref_fedavg_flat(stacked, weights):
     """stacked (C, P), weights (C,) -> (P,)."""
     return jnp.einsum("c,cp->p", weights.astype(jnp.float32),
                       stacked.astype(jnp.float32)).astype(stacked.dtype)
+
+
+def ref_momentum_reduce_flat(stacked, weights, moment, *, beta):
+    """Weighted delta moment + server momentum: the obvious two-liner."""
+    d = jnp.einsum("c,cp->p", weights.astype(jnp.float32),
+                   stacked.astype(jnp.float32))
+    nm = beta * moment.astype(jnp.float32) + d
+    return d.astype(stacked.dtype), nm
+
+
+def ref_trimmed_flat(stacked, weights, *, trim):
+    """Rank-trimmed weighted mean via an explicit stable argsort: sort
+    each coordinate's clients (ties by client index), drop ``trim`` at
+    each end, weighted-mean the survivors with renormalized weights."""
+    x = stacked.astype(jnp.float32)
+    c = x.shape[0]
+    order = jnp.argsort(x, axis=0, stable=True)
+    xs = jnp.take_along_axis(x, order, axis=0)
+    ws = weights.astype(jnp.float32)[order]
+    keep = ((jnp.arange(c) >= trim) & (jnp.arange(c) < c - trim))
+    keep = keep.astype(jnp.float32)[:, None]
+    num = jnp.sum(keep * ws * xs, axis=0)
+    den = jnp.sum(keep * ws, axis=0)
+    return (num / den).astype(stacked.dtype)

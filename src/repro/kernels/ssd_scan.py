@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import interpret_default
+
 
 def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, alog_ref, d_ref, y_ref,
                 state_ref, *, chunk: int):
@@ -70,12 +72,16 @@ def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, alog_ref, d_ref, y_ref,
 
 
 def ssd_scan_bhsp(x, dt, A_log, B, C, D, *, chunk: int = 128,
-                  interpret: bool = True):
+                  interpret: bool | None = None):
     """x (b, s, h, p); dt (b, s, h); A_log/D (h,); B/C (b, s, n) -> y like x.
 
     s must be a multiple of ``chunk`` (ops.ssd_scan pads with dt=0, which is
-    an exact identity for the recurrence).
+    an exact identity for the recurrence). ``interpret`` defaults to the
+    backend (interpret on CPU, native on TPU) so direct callers never
+    silently run interpret mode on hardware.
     """
+    if interpret is None:
+        interpret = interpret_default()
     b, s, h, p = x.shape
     n = B.shape[-1]
     assert s % chunk == 0, (s, chunk)

@@ -168,26 +168,108 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     return result
 
 
+def lower_gpo_round(agg_name: str, *, clients: int = 8,
+                    use_pallas: bool = False, verbose: bool = True) -> dict:
+    """Compile the shard_map federated GPO round for one aggregation
+    strategy on a ``clients``-device 'data' mesh and report its
+    collective schedule (DESIGN.md §7): linear strategies must show ONE
+    parameter-sized all-reduce (the weighted delta psum); the robust
+    strategies an all-gather of the flat client-delta matrix instead."""
+    from jax.sharding import NamedSharding
+    from repro.configs import AggConfig, FedConfig, GPOConfig
+    from repro.core import make_aggregator
+    from repro.core.federated import make_sharded_round
+    from repro.core.gpo import init_gpo_params
+    from repro.data import SurveyConfig, make_survey_data
+    from repro.launch.sharding import server_state_shardings
+    from repro.optim import adam
+
+    mesh = jax.make_mesh((clients,), ("data",))
+    data = make_survey_data(SurveyConfig(num_groups=clients,
+                                         num_questions=30, d_embed=16,
+                                         seed=0))
+    gcfg = GPOConfig(d_embed=16, d_model=32, num_layers=1, num_heads=2,
+                     d_ff=32)
+    fcfg = FedConfig(num_clients=clients, local_epochs=2, num_context=6,
+                     num_target=6, agg=AggConfig(name=agg_name),
+                     use_pallas_aggregation=use_pallas)
+    opt = adam(fcfg.lr)
+    agg = make_aggregator(fcfg.agg, num_clients=clients,
+                          use_pallas=use_pallas)
+    params = init_gpo_params(gcfg, jax.random.PRNGKey(0))
+    server_state = agg.init(params)
+    round_fn = make_sharded_round(gcfg, fcfg, data, mesh, opt=opt, agg=agg)
+
+    spec = NamedSharding(mesh, P("data"))
+    shard = lambda t: jax.tree.map(  # noqa: E731
+        lambda x: jax.ShapeDtypeStruct(
+            (clients,) + tuple(x.shape), x.dtype, sharding=spec), t)
+    cp = shard(params)
+    opt_s = shard(opt.init(params))
+    keys = jax.ShapeDtypeStruct((clients, 2), jnp.uint32, sharding=spec)
+    gids = jax.ShapeDtypeStruct((clients,), jnp.int32, sharding=spec)
+    w = jax.ShapeDtypeStruct((clients,), jnp.float32, sharding=spec)
+    srv = jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(tuple(x.shape), x.dtype,
+                                          sharding=s),
+        server_state, server_state_shardings(server_state, mesh))
+
+    t0 = time.time()
+    lowered = jax.jit(round_fn).lower(cp, opt_s, keys, gids, w, srv)
+    compiled = lowered.compile()
+    coll = rl.parse_collectives(compiled.as_text())
+    result = {
+        "agg": agg_name,
+        "clients": clients,
+        "use_pallas_aggregation": use_pallas,
+        "linear": agg.linear,
+        "compile_s": round(time.time() - t0, 1),
+        "collective_bytes_by_kind": dict(coll.bytes_by_kind),
+        "collective_count_by_kind": dict(coll.count_by_kind),
+        "collective_count": coll.total_count,
+        "memory": _mem_stats(compiled.memory_analysis()),
+    }
+    if verbose:
+        print(f"== gpo-fed round x agg={agg_name} mesh={clients} ==")
+        print("collectives:", result["collective_bytes_by_kind"])
+    return result
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True, choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=sorted(INPUT_SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--gpo-fed", action="store_true",
+                    help="lower the shard_map federated GPO round instead "
+                         "of a backbone (arch/shape ignored)")
+    ap.add_argument("--agg", default="fedavg",
+                    help="aggregation strategy for --gpo-fed")
+    ap.add_argument("--clients", type=int, default=8,
+                    help="client-mesh size for --gpo-fed")
     ap.add_argument("--out", default=None, help="append result as json line")
     args = ap.parse_args()
+    if not args.gpo_fed and not (args.arch and args.shape):
+        ap.error("--arch and --shape are required unless --gpo-fed")
+    what = (f"gpo-fed x {args.agg} clients={args.clients}" if args.gpo_fed
+            else f"{args.arch} x {args.shape} multi_pod={args.multi_pod}")
     try:
-        result = lower_pair(args.arch, args.shape, multi_pod=args.multi_pod)
+        if args.gpo_fed:
+            result = lower_gpo_round(args.agg, clients=args.clients)
+        else:
+            result = lower_pair(args.arch, args.shape,
+                                multi_pod=args.multi_pod)
         status = "ok"
     except Exception:
         traceback.print_exc()
         result = {"arch": args.arch, "shape": args.shape,
+                  "gpo_fed": args.gpo_fed,
                   "multi_pod": args.multi_pod, "error": traceback.format_exc()}
         status = "error"
     if args.out:
         with open(args.out, "a") as f:
             f.write(json.dumps(result) + "\n")
-    print(f"DRYRUN {status}: {args.arch} x {args.shape} "
-          f"multi_pod={args.multi_pod}")
+    print(f"DRYRUN {status}: {what}")
     if status == "error":
         raise SystemExit(1)
 

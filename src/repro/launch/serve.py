@@ -1,9 +1,15 @@
 """Serving launcher: batched greedy decoding against a prefilled KV cache,
 or batched GPO preference prediction (the paper's inference product).
 
+The GPO path trains once and checkpoints the predictor (repro.checkpoint);
+``--restore`` serves the latest checkpoint from ``--ckpt-dir`` instead of
+retraining, which is the actual serving contract — the trained preference
+model is the product, not the training loop.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
       --prompt-len 16 --gen-len 16 --batch 4
   PYTHONPATH=src python -m repro.launch.serve --gpo --batch 8
+  PYTHONPATH=src python -m repro.launch.serve --gpo --restore --batch 8
 """
 from __future__ import annotations
 
@@ -14,7 +20,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import FedConfig, GPOConfig, get_arch, smoke_variant
+from repro.checkpoint import (
+    latest_checkpoint,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.configs import AggConfig, FedConfig, GPOConfig, get_arch, smoke_variant
 from repro.core import (
     FederatedGPO,
     greedy_decode,
@@ -55,15 +66,32 @@ def serve_lm(args) -> None:
 
 def serve_gpo(args) -> None:
     """Batched preference prediction for unseen groups — the aligned-LLM
-    reward-model serving path the paper proposes (§5)."""
+    reward-model serving path the paper proposes (§5). Trains once and
+    checkpoints; ``--restore`` loads the latest checkpoint instead."""
     data = make_survey_data(SurveyConfig(seed=args.seed))
     tr, ev = split_groups(data, seed=args.seed)
     gcfg = GPOConfig(d_embed=data.phi.shape[-1])
-    fcfg = FedConfig(num_clients=len(tr), rounds=args.rounds, seed=args.seed)
-    fed = FederatedGPO(gcfg, fcfg, data, tr, ev)
-    print(f"training federated GPO for {args.rounds} rounds ...")
-    fed.run(rounds=args.rounds)
-    params = fed.global_params
+    fcfg = FedConfig(num_clients=len(tr), rounds=args.rounds, seed=args.seed,
+                     agg=AggConfig(name=args.agg, prox_mu=args.prox_mu))
+    if args.restore:
+        path = latest_checkpoint(args.ckpt_dir)
+        if path is None:
+            raise SystemExit(
+                f"--restore: no checkpoint under {args.ckpt_dir!r}; run "
+                "once without --restore to train and save one")
+        like = init_gpo_params(gcfg, jax.random.PRNGKey(args.seed))
+        params = restore_checkpoint(path, like)
+        print(f"restored GPO predictor from {path}")
+    else:
+        fed = FederatedGPO(gcfg, fcfg, data, tr, ev)
+        print(f"training federated GPO for {args.rounds} rounds ...")
+        fed.run(rounds=args.rounds)
+        params = fed.global_params
+        path = save_checkpoint(
+            args.ckpt_dir, args.rounds, params,
+            metadata={"rounds": args.rounds, "seed": args.seed,
+                      "agg": args.agg, "d_embed": gcfg.d_embed})
+        print(f"saved GPO predictor to {path} (serve with --restore)")
 
     @jax.jit
     def predict_batch(keys, groups):
@@ -104,6 +132,16 @@ def main() -> None:
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--rounds", type=int, default=60)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="checkpoints/gpo_serve")
+    ap.add_argument("--restore", action="store_true",
+                    help="load the latest GPO checkpoint instead of "
+                         "retraining (gpo mode)")
+    ap.add_argument("--agg", default="fedavg",
+                    help="server-aggregation strategy for the training "
+                         "path (DESIGN.md §7)")
+    ap.add_argument("--prox-mu", type=float, default=0.0,
+                    help="FedProx proximal coefficient (required > 0 for "
+                         "--agg fedprox to differ from fedavg)")
     args = ap.parse_args()
     if args.gpo:
         serve_gpo(args)

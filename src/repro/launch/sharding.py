@@ -124,6 +124,15 @@ def adam_state_shardings(p_shard: PyTree, mesh):
     return AdamState(step=NamedSharding(mesh, P()), mu=p_shard, nu=p_shard)
 
 
+def server_state_shardings(state: PyTree, mesh) -> PyTree:
+    """Server-aggregator ``AggState`` is replicated on every shard
+    (DESIGN.md §7): the post-psum server update is deterministic, so each
+    client shard carries the momentum/moment trees and adaptive scores
+    whole rather than paying a gather before every round."""
+    repl = NamedSharding(mesh, P())
+    return jax.tree.map(lambda _: repl, state)
+
+
 def adafactor_state_shardings(p_shard: PyTree, params_shapes: PyTree, mesh):
     """AdafactorState: v_row drops the param's last dim, v_col its
     second-to-last; v_full only exists for <2-D leaves (replicated)."""

@@ -12,10 +12,15 @@ Three trainer modes, all runnable on CPU with --smoke (reduced configs):
               predictor on synthetic survey data (see benchmarks/ for the
               full figure reproduction).
 
+All federated trainers take ``--agg`` (plus the matching hyperparameter
+flags) to select the server-aggregation strategy from the registry in
+``repro.core.aggregation`` (DESIGN.md §7).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
-      --trainer fedavg --rounds 3 --local-steps 2
-  PYTHONPATH=src python -m repro.launch.train --trainer gpo --rounds 50
+      --trainer fedavg --rounds 3 --local-steps 2 --agg fedavgm
+  PYTHONPATH=src python -m repro.launch.train --trainer gpo --rounds 50 \
+      --agg adaptive
 """
 from __future__ import annotations
 
@@ -28,6 +33,7 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import (
+    AggConfig,
     FedConfig,
     GPOConfig,
     INPUT_SHAPES,
@@ -35,9 +41,11 @@ from repro.configs import (
     smoke_variant,
 )
 from repro.core import (
+    AGGREGATORS,
     FederatedGPO,
     broadcast_to_clients,
     init_lora,
+    make_aggregator,
     make_backbone_fedavg_round,
     make_fedlora_round,
     make_train_step,
@@ -72,14 +80,31 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
+    # server-aggregation strategy (DESIGN.md §7); applies to the gpo,
+    # fedavg, and fedlora trainers
+    ap.add_argument("--agg", default="fedavg", choices=AGGREGATORS.names())
+    ap.add_argument("--server-lr", type=float, default=1.0)
+    ap.add_argument("--server-momentum", type=float, default=0.9,
+                    help="fedavgm server momentum")
+    ap.add_argument("--prox-mu", type=float, default=0.0,
+                    help="FedProx client proximal coefficient (gpo trainer)")
+    ap.add_argument("--trim-frac", type=float, default=0.1,
+                    help="trimmed_mean per-side trim fraction")
+    ap.add_argument("--fair-temp", type=float, default=1.0,
+                    help="adaptive fairness-weight temperature")
     args = ap.parse_args()
+
+    agg_cfg = AggConfig(name=args.agg, server_lr=args.server_lr,
+                        momentum=args.server_momentum,
+                        prox_mu=args.prox_mu, trim_frac=args.trim_frac,
+                        fair_temp=args.fair_temp)
 
     if args.trainer == "gpo":
         data = make_survey_data(SurveyConfig(seed=args.seed))
         tr, ev = split_groups(data, seed=args.seed)
         gcfg = GPOConfig(d_embed=data.phi.shape[-1])
         fcfg = FedConfig(num_clients=len(tr), rounds=args.rounds,
-                         seed=args.seed)
+                         seed=args.seed, agg=agg_cfg)
         fed = FederatedGPO(gcfg, fcfg, data, tr, ev)
         hist = fed.run(rounds=args.rounds, log_every=10)
         print(f"final loss={hist.round_loss[-1]:.4f} "
@@ -111,21 +136,25 @@ def main() -> None:
     else:
         c = args.clients
         weights = normalize_weights(jnp.ones((c,)))
+        agg = make_aggregator(agg_cfg, num_clients=c)
         if args.trainer == "fedavg":
             client_params = broadcast_to_clients(params, c)
             opt_states = jax.vmap(opt.init)(client_params)
             rnd = jax.jit(make_backbone_fedavg_round(cfg, opt,
-                                                     args.local_steps))
+                                                     args.local_steps,
+                                                     agg=agg))
+            server_state = agg.init(params)
         else:
             lora = init_lora(params, key, rank=8)
             client_params = broadcast_to_clients(lora, c)
             opt_states = jax.vmap(opt.init)(client_params)
             rnd = jax.jit(make_fedlora_round(cfg, params, opt,
-                                             args.local_steps))
+                                             args.local_steps, agg=agg))
+            server_state = agg.init(lora)
         for r in range(args.rounds):
             batches = _stack_client_batches(it, c, args.local_steps)
-            client_params, opt_states, losses = rnd(
-                client_params, opt_states, batches, weights)
+            client_params, opt_states, losses, server_state = rnd(
+                client_params, opt_states, batches, weights, server_state)
             print(f"round {r:3d} client losses="
                   f"{np.round(np.asarray(losses), 4)}")
     if args.ckpt_dir:

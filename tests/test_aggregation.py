@@ -1,0 +1,290 @@
+"""The pluggable server-aggregation subsystem (DESIGN.md §7).
+
+Four contracts, each tested across the registry:
+
+1. degeneracy — every strategy with trivial hyperparameters (zero
+   momentum, beta2=1/tau=1 moments, mu=0 prox, zero trim, zero
+   fairness temperature) reproduces the paper's Eq. 2-3 FedAvg;
+2. engine equivalence — scan and loop drivers agree per strategy, with
+   the server-optimizer state riding the fused scan carry;
+3. sharded equivalence — ``make_sharded_round`` on a client mesh equals
+   the stacked reference per strategy (delta psum for the linear family,
+   all-gather + rank-trim for the robust family);
+4. unit semantics — trim/median order statistics, adaptive weights,
+   FedProx proximal pull.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import AggConfig, FedConfig, GPOConfig
+from repro.core import (
+    AGGREGATORS,
+    FederatedGPO,
+    broadcast_to_clients,
+    make_aggregator,
+    normalize_weights,
+)
+from repro.core.aggregation import trimmed_mean_reduce_flat
+from repro.core.federated import _make_local_train, make_sharded_round
+from repro.core.gpo import init_gpo_params
+from repro.data import SurveyConfig, make_survey_data, split_groups
+from repro.optim import adam
+from repro.utils.pytree import tree_sub
+
+GCFG = GPOConfig(d_embed=8, d_model=16, num_layers=1, num_heads=2, d_ff=32)
+
+# hyperparameters that degenerate each strategy to exact FedAvg
+TRIVIAL = {
+    "fedavg": {},
+    "fedprox": {"prox_mu": 0.0},
+    "fedavgm": {"momentum": 0.0, "server_lr": 1.0},
+    # beta2=1 freezes v at its zero init; tau=1 makes the denominator 1
+    "fedadam": {"beta1": 0.0, "beta2": 1.0, "tau": 1.0, "server_lr": 1.0},
+    "fedyogi": {"beta1": 0.0, "beta2": 1.0, "tau": 1.0, "server_lr": 1.0},
+    "trimmed_mean": {"trim_frac": 0.0},
+    "adaptive": {"fair_temp": 0.0},
+}
+
+# hyperparameters that exercise each strategy's actual mechanism
+ACTIVE = {
+    "fedavg": {},
+    "fedprox": {"prox_mu": 0.1},
+    "fedavgm": {"momentum": 0.9},
+    "fedadam": {"beta1": 0.9, "beta2": 0.99, "tau": 1e-2,
+                "server_lr": 1e-1},
+    "fedyogi": {"beta1": 0.9, "beta2": 0.99, "tau": 1e-2,
+                "server_lr": 1e-1},
+    "trimmed_mean": {"trim_frac": 0.2},
+    "median": {},
+    "adaptive": {"fair_temp": 1.0, "fair_decay": 0.5},
+}
+
+
+def _make_fed(agg_cfg=AggConfig(), use_pallas=False, seed=3):
+    data = make_survey_data(SurveyConfig(
+        num_groups=6, num_questions=24, d_embed=8, seed=seed))
+    tr, ev = split_groups(data, seed=seed)
+    fcfg = FedConfig(num_clients=len(tr), rounds=3, local_epochs=2,
+                     eval_every=2, num_context=4, num_target=4,
+                     use_pallas_aggregation=use_pallas, agg=agg_cfg,
+                     seed=seed)
+    return FederatedGPO(GCFG, fcfg, data, tr, ev)
+
+
+def _assert_close(fed_a, fed_b, hist_a, hist_b, rtol=1e-4, atol=1e-6):
+    np.testing.assert_allclose(hist_a.round_loss, hist_b.round_loss,
+                               rtol=rtol, atol=atol)
+    for a, b in zip(jax.tree.leaves(fed_a.global_params),
+                    jax.tree.leaves(fed_b.global_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=rtol, atol=atol)
+
+
+def test_registry_lists_the_full_family():
+    assert {"fedavg", "fedavgm", "fedadam", "fedyogi", "fedprox",
+            "trimmed_mean", "median", "adaptive"} <= set(AGGREGATORS.names())
+    with pytest.raises(KeyError):
+        make_aggregator(AggConfig(name="nope"), num_clients=4)
+
+
+@pytest.mark.parametrize("name", sorted(TRIVIAL))
+def test_trivial_hyperparams_reproduce_fedavg(name):
+    """Degenerate configs collapse every strategy to Eq. 2-3 FedAvg."""
+    fed_ref = _make_fed()
+    hist_ref = fed_ref.run(rounds=3)
+    fed = _make_fed(AggConfig(name=name, **TRIVIAL[name]))
+    hist = fed.run(rounds=3)
+    _assert_close(fed_ref, fed, hist_ref, hist)
+
+
+@pytest.mark.parametrize("name", sorted(ACTIVE))
+def test_scan_matches_loop_with_server_state(name):
+    """Both drivers agree per strategy — the server-optimizer state in
+    the fused scan carry advances exactly like the per-round loop's."""
+    cfg = AggConfig(name=name, **ACTIVE[name])
+    fed_scan = _make_fed(cfg)
+    hist_scan = fed_scan.run(rounds=3, engine="scan")
+    fed_loop = _make_fed(cfg)
+    hist_loop = fed_loop.run(rounds=3, engine="loop")
+    _assert_close(fed_scan, fed_loop, hist_scan, hist_loop, rtol=1e-3)
+    for a, b in zip(jax.tree.leaves(fed_scan.server_state),
+                    jax.tree.leaves(fed_loop.server_state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
+    assert int(jax.tree.leaves(fed_scan.server_state.step)[0]) == 3
+
+
+@pytest.mark.parametrize("name", sorted(ACTIVE))
+def test_sharded_round_matches_stacked(name):
+    """make_sharded_round on a 1-device client mesh equals the stacked
+    engine's round for every strategy (delta psum / all-gather trim)."""
+    C = 5
+    data = make_survey_data(SurveyConfig(
+        num_groups=C, num_questions=24, d_embed=8, seed=0))
+    fcfg = FedConfig(num_clients=C, local_epochs=2, lr=1e-3,
+                     num_context=4, num_target=4,
+                     agg=AggConfig(name=name, **ACTIVE[name]))
+    opt = adam(fcfg.lr)
+    agg = make_aggregator(fcfg.agg, num_clients=C)
+    params = init_gpo_params(GCFG, jax.random.PRNGKey(0))
+    server_state = agg.init(params)
+    groups = jnp.arange(C, dtype=jnp.int32)
+    weights = normalize_weights(data.sizes[groups])
+    keys = jax.random.split(jax.random.PRNGKey(1), C)
+    client_params = broadcast_to_clients(params, C)
+    opt_states = jax.vmap(opt.init)(client_params)
+
+    # stacked reference: vmap local train + the aggregator's own step
+    local_train = _make_local_train(GCFG, fcfg, data, opt)
+    cp_ref, _, losses_ref = jax.jit(jax.vmap(local_train))(
+        client_params, opt_states, keys, groups)
+    deltas = tree_sub(cp_ref, client_params)
+    global_ref, srv_ref = agg.step(server_state, params, deltas, weights,
+                                   losses=losses_ref,
+                                   idx=jnp.arange(C))
+
+    mesh = jax.make_mesh((1,), ("data",))
+    round_fn = make_sharded_round(GCFG, fcfg, data, mesh, opt=opt, agg=agg)
+    cp_s, _, losses_s, srv_s = jax.jit(round_fn)(
+        client_params, opt_states, keys, groups, weights, server_state)
+
+    np.testing.assert_allclose(np.asarray(losses_ref), np.asarray(losses_s),
+                               rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(global_ref), jax.tree.leaves(cp_s)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b)[0],
+                                   rtol=1e-4, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(srv_ref), jax.tree.leaves(srv_s)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["fedavg", "fedavgm", "trimmed_mean",
+                                  "median"])
+def test_pallas_aggregation_matches_jnp(name):
+    """use_pallas_aggregation routes the reductions through the kernels
+    in kernels/agg_reduce.py; metrics must match the jnp reference."""
+    cfg = AggConfig(name=name, **ACTIVE.get(name, {}))
+    fed_jnp = _make_fed(cfg)
+    hist_jnp = fed_jnp.run(rounds=3)
+    fed_pal = _make_fed(cfg, use_pallas=True)
+    hist_pal = fed_pal.run(rounds=3)
+    _assert_close(fed_jnp, fed_pal, hist_jnp, hist_pal, rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(fed_jnp.server_state),
+                    jax.tree.leaves(fed_pal.server_state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# unit semantics
+# ---------------------------------------------------------------------------
+def test_trimmed_mean_ignores_outlier_client():
+    key = jax.random.PRNGKey(0)
+    vecs = jax.random.normal(key, (8, 64))
+    vecs = vecs.at[3].set(1e6)  # one poisoned client
+    w = jnp.full((8,), 1.0 / 8)
+    out = trimmed_mean_reduce_flat(vecs, w, k=1)
+    assert float(jnp.max(jnp.abs(out))) < 100.0
+    # untrimmed mean is dominated by the outlier
+    assert float(jnp.max(jnp.abs(trimmed_mean_reduce_flat(
+        vecs, w, k=0)))) > 1e4
+
+
+def test_median_matches_numpy_median_for_uniform_weights():
+    key = jax.random.PRNGKey(1)
+    vecs = jax.random.normal(key, (7, 33))
+    w = jnp.full((7,), 1.0 / 7)
+    out = trimmed_mean_reduce_flat(vecs, w, k=3)  # (C-1)//2 == median
+    np.testing.assert_allclose(np.asarray(out),
+                               np.median(np.asarray(vecs), axis=0),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_adaptive_weights_upweight_high_loss_groups():
+    agg = make_aggregator(AggConfig(name="adaptive", fair_temp=1.0),
+                          num_clients=4)
+    state = agg.init({"w": jnp.zeros((3,))})
+    state = state._replace(scores={
+        "ema": jnp.array([0.1, 0.1, 0.1, 2.0]), "seen": jnp.ones((4,))})
+    base = jnp.full((4,), 0.25)
+    w = agg.weigh(state, base, None)
+    assert float(jnp.sum(w)) == pytest.approx(1.0, abs=1e-6)
+    assert float(w[3]) > float(w[0])  # worst-served group upweighted
+    # temperature 0 returns the base weights untouched (exact)
+    agg0 = make_aggregator(AggConfig(name="adaptive", fair_temp=0.0),
+                           num_clients=4)
+    assert agg0.weigh(state, base, None) is base
+
+
+def test_adaptive_seeds_ema_and_neutral_weights_for_unseen_clients():
+    """First observation seeds the EMA (no decay from the zero init);
+    clients not yet sampled sit at the observed mean in weigh(), so
+    partial participation never down-weights them by default."""
+    agg = make_aggregator(AggConfig(name="adaptive", fair_temp=1.0,
+                                    fair_decay=0.9), num_clients=4)
+    g = {"w": jnp.zeros((3,))}
+    state = agg.init(g)
+    # rounds advance the step, then clients 0 and 1 are first observed
+    state = state._replace(step=jnp.asarray(5, jnp.int32))
+    _, state = agg.apply(state, g, {"w": jnp.zeros((3,))},
+                         losses=jnp.array([2.0, 4.0]),
+                         idx=jnp.array([0, 1]))
+    np.testing.assert_allclose(np.asarray(state.scores["ema"][:2]),
+                               [2.0, 4.0])  # seeded, not 0.1*loss
+    # unseen clients 2/3 weigh as if at the observed mean (3.0): their
+    # effective weight matches a hypothetical client with score 3.0
+    w = agg.weigh(state, jnp.full((4,), 0.25), None)
+    assert float(w[1]) > float(w[2]) > float(w[0])
+    # second observation applies the EMA decay
+    _, state = agg.apply(state, g, {"w": jnp.zeros((3,))},
+                         losses=jnp.array([3.0]), idx=jnp.array([0]))
+    np.testing.assert_allclose(float(state.scores["ema"][0]),
+                               0.9 * 2.0 + 0.1 * 3.0, rtol=1e-6)
+
+
+def test_fedprox_mu_pulls_local_models_toward_anchor():
+    data = make_survey_data(SurveyConfig(
+        num_groups=4, num_questions=24, d_embed=8, seed=2))
+    params = init_gpo_params(GCFG, jax.random.PRNGKey(0))
+    drift = {}
+    for mu in (0.0, 10.0):
+        fcfg = FedConfig(num_clients=4, local_epochs=4, num_context=4,
+                         num_target=4, agg=AggConfig(name="fedprox",
+                                                     prox_mu=mu))
+        opt = adam(fcfg.lr)
+        local_train = _make_local_train(GCFG, fcfg, data, opt)
+        new_p, _, _ = jax.jit(local_train)(
+            params, opt.init(params), jax.random.PRNGKey(1),
+            jnp.asarray(0, jnp.int32))
+        drift[mu] = float(sum(
+            jnp.sum(jnp.square(a - b)) for a, b in
+            zip(jax.tree.leaves(new_p), jax.tree.leaves(params))))
+    assert drift[10.0] < drift[0.0]
+
+
+def test_backbone_trainers_reject_client_side_prox():
+    """prox_mu only exists in the GPO engine's local objective; the
+    backbone/LoRA trainers must fail loudly rather than silently run
+    FedAvg under the name fedprox."""
+    from repro.configs import get_arch, smoke_variant
+    from repro.core import make_backbone_fedavg_round, make_fedlora_round
+
+    cfg = smoke_variant(get_arch("qwen2-0.5b"))
+    agg = make_aggregator(AggConfig(name="fedprox", prox_mu=0.1),
+                          num_clients=2)
+    with pytest.raises(ValueError, match="prox_mu"):
+        make_backbone_fedavg_round(cfg, adam(1e-3), 1, agg=agg)
+    with pytest.raises(ValueError, match="prox_mu"):
+        make_fedlora_round(cfg, {}, adam(1e-3), 1, agg=agg)
+
+
+def test_median_of_identical_clients_is_identity():
+    agg = make_aggregator(AggConfig(name="median"), num_clients=5)
+    single = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 3))}
+    deltas = broadcast_to_clients(single, 5)
+    w = normalize_weights(jnp.arange(1.0, 6.0))
+    out = agg.reduce(deltas, w)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(single["w"]), rtol=1e-6)

@@ -6,6 +6,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import (
+    agg_momentum_reduce,
+    agg_trimmed_reduce,
     fedavg_reduce,
     fedavg_reduce_tree,
     flash_attention,
@@ -16,7 +18,9 @@ from repro.kernels.ref import (
     ref_attention,
     ref_fedavg_flat,
     ref_gpo_attention,
+    ref_momentum_reduce_flat,
     ref_ssd,
+    ref_trimmed_flat,
 )
 
 
@@ -179,6 +183,58 @@ def test_fedavg_reduce_sweep(c, p, dtype):
     ref = ref_fedavg_flat(stacked, w)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("c,p", [(2, 100), (5, 10001), (16, 4096)])
+@pytest.mark.parametrize("beta", [0.0, 0.9])
+def test_momentum_reduce_sweep(c, p, beta):
+    """Weighted delta-moment kernel == the obvious two-liner, and its
+    delta output == the plain fedavg reduction (beta only shapes m)."""
+    key = jax.random.PRNGKey(7)
+    stacked = jax.random.normal(key, (c, p))
+    m = jax.random.normal(jax.random.fold_in(key, 1), (p,))
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 2), (c,)))
+    d, nm = agg_momentum_reduce(stacked, w, m, beta=beta)
+    d_ref, nm_ref = ref_momentum_reduce_flat(stacked, w, m, beta=beta)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d_ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(nm), np.asarray(nm_ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(d),
+                               np.asarray(fedavg_reduce(stacked, w)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("c,trim", [(3, 1), (5, 2), (8, 1), (9, 4)])
+@pytest.mark.parametrize("p", [100, 5000])
+def test_trimmed_reduce_sweep(c, trim, p):
+    """Client-axis rank/trim kernel == the stable-argsort oracle
+    (trim=(C-1)//2 cases are the coordinate-wise median)."""
+    key = jax.random.PRNGKey(8)
+    stacked = jax.random.normal(key, (c, p))
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (c,)))
+    out = agg_trimmed_reduce(stacked, w, trim=trim)
+    ref = ref_trimmed_flat(stacked, w, trim=trim)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_trimmed_reduce_handles_ties_stably():
+    """Duplicate values across clients: ranks break ties by client index
+    (a stable sort), so kernel and oracle agree bit-for-bit."""
+    stacked = jnp.array([[1.0, 2.0], [1.0, 2.0], [0.0, 3.0], [1.0, 2.0]])
+    w = jnp.array([0.4, 0.3, 0.2, 0.1])
+    out = agg_trimmed_reduce(stacked, w, trim=1)
+    ref = ref_trimmed_flat(stacked, w, trim=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_trimmed_reduce_rejects_bad_trim():
+    stacked = jnp.ones((4, 8))
+    w = jnp.full((4,), 0.25)
+    with pytest.raises(ValueError):
+        agg_trimmed_reduce(stacked, w, trim=2)
 
 
 def test_fedavg_reduce_tree_matches_stacked():

@@ -10,8 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import FedConfig, GPOConfig
-from repro.core import FederatedGPO, fedavg_stacked
+from repro.configs import AggConfig, FedConfig, GPOConfig
+from repro.core import FederatedGPO, fedavg_stacked, make_aggregator
 from repro.core.federated import make_sharded_round, _make_local_train
 from repro.core.fedavg import broadcast_to_clients, normalize_weights
 from repro.core.gpo import init_gpo_params
@@ -21,7 +21,8 @@ from repro.optim import adam
 GCFG = GPOConfig(d_embed=24, d_model=48, num_layers=2, num_heads=4, d_ff=96)
 
 
-def _make_fed(batch_groups=0, use_pallas_aggregation=False, seed=5):
+def _make_fed(batch_groups=0, use_pallas_aggregation=False, seed=5,
+              agg=AggConfig()):
     data = make_survey_data(SurveyConfig(
         num_groups=8, num_questions=40, d_embed=24, seed=seed))
     tr, ev = split_groups(data, seed=seed)
@@ -29,7 +30,7 @@ def _make_fed(batch_groups=0, use_pallas_aggregation=False, seed=5):
                      eval_every=2, num_context=6, num_target=6,
                      batch_groups=batch_groups,
                      use_pallas_aggregation=use_pallas_aggregation,
-                     seed=seed)
+                     agg=agg, seed=seed)
     return FederatedGPO(GCFG, fcfg, data, tr, ev)
 
 
@@ -112,6 +113,26 @@ def test_scan_engine_is_default_and_resumable():
     assert np.mean(hist2.round_loss) < np.mean(hist1.round_loss)
 
 
+def test_scan_carries_server_optimizer_state():
+    """Stateful server aggregation (fedadam) rides the fused scan carry:
+    both drivers advance the same moments, chunked logging does not
+    perturb them, and a second ``run`` resumes from the carried state."""
+    agg = AggConfig(name="fedadam", beta1=0.9, beta2=0.99, tau=1e-2,
+                    server_lr=0.1)
+    fed_scan = _make_fed(agg=agg)
+    hist_scan = fed_scan.run(rounds=4, engine="scan")
+    fed_loop = _make_fed(agg=agg)
+    hist_loop = fed_loop.run(rounds=4, engine="loop")
+    _assert_hist_close(hist_scan, hist_loop)
+    for a, b in zip(jax.tree.leaves(fed_scan.server_state),
+                    jax.tree.leaves(fed_loop.server_state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
+    assert int(fed_scan.server_state.step) == 4
+    fed_scan.run(rounds=3, log_every=2)  # chunked block + tail round
+    assert int(fed_scan.server_state.step) == 7
+
+
 def test_pallas_aggregation_round_path_matches_stacked():
     hist_jnp = _make_fed().run(rounds=4)
     fed_pal = _make_fed(use_pallas_aggregation=True)
@@ -145,8 +166,11 @@ def test_sharded_round_pallas_aggregation_wiring():
 
     mesh = jax.make_mesh((1,), ("data",))
     round_fn = make_sharded_round(gcfg, fcfg, data, mesh, opt=opt)
-    cp_s, _, losses_s = jax.jit(round_fn)(
-        client_params, opt_states, keys, groups, weights)
+    agg = make_aggregator(fcfg.agg, num_clients=C,
+                          use_pallas=fcfg.use_pallas_aggregation)
+    srv = agg.init(params)
+    cp_s, _, losses_s, _ = jax.jit(round_fn)(
+        client_params, opt_states, keys, groups, weights, srv)
 
     np.testing.assert_allclose(np.asarray(losses_ref), np.asarray(losses_s),
                                rtol=1e-5, atol=1e-6)

@@ -19,10 +19,12 @@ import jax, jax.numpy as jnp, numpy as np, json
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import FedConfig, GPOConfig
-from repro.core import broadcast_to_clients, fedavg_stacked, normalize_weights
+from repro.core import (broadcast_to_clients, fedavg_stacked,
+                        make_aggregator, normalize_weights)
 from repro.core.federated import _make_local_train, make_sharded_round
 from repro.core.gpo import init_gpo_params
 from repro.data import SurveyConfig, make_survey_data
+from repro.launch.sharding import server_state_shardings
 from repro.optim import adam
 
 C = 8
@@ -51,12 +53,16 @@ global_v = fedavg_stacked(cp_v, weights)
 mesh = jax.make_mesh((8,), ("data",))
 round_fn = make_sharded_round(gcfg, fcfg, data, mesh, client_axes=("data",),
                               opt=opt)
+agg = make_aggregator(fcfg.agg, num_clients=C)
+srv = agg.init(params)
 spec = NamedSharding(mesh, P("data"))
 put = lambda t: jax.tree.map(
     lambda x: jax.device_put(x, spec), t)
-cp_s, os_s, losses_s = jax.jit(round_fn)(
+put_repl = lambda t: jax.tree.map(
+    lambda x, s: jax.device_put(x, s), t, server_state_shardings(t, mesh))
+cp_s, os_s, losses_s, srv_s = jax.jit(round_fn)(
     put(client_params), put(opt_states), put(keys), put(groups),
-    put(weights))
+    put(weights), put_repl(srv))
 
 # every client shard must now hold the SAME global params == vmap result
 ok_losses = np.allclose(np.asarray(losses_v), np.asarray(losses_s),
