@@ -14,5 +14,11 @@ test-fast:
 bench-round:
 	$(PY) -m benchmarks.bench_round
 
+# reduced-config benchmark pass for the CI smoke job: exercises every
+# BENCH_*.json writer (round engine, aggregator sweep, attention
+# fwd+bwd) in a few minutes
+bench-smoke:
+	$(PY) -m benchmarks.bench_round --rounds 30 --agg-rounds 10 --reps 2
+
 bench:
 	$(PY) -m benchmarks.run

@@ -27,6 +27,19 @@ structure — and writes ``BENCH_agg.json``: rounds/sec (the aggregation
 subsystem's overhead over plain FedAvg) plus the final alignment score
 and fairness index per strategy (the quality axes the strategies trade).
 
+A fifth section benchmarks the TRAINING hot path — fwd+bwd attention,
+dense jnp autodiff vs the banded custom-VJP kernels (DESIGN.md §8) —
+and writes ``BENCH_attn.json``: fwd and bwd visited-tile counts (banded
+strictly below the dense grid) and wall-clock at t >> m shapes.
+
+Interpret-mode honesty: on CPU the Pallas kernels run in interpret mode,
+whose absolute timings are meaningless next to compiled jnp (≈1000x
+slow). Every Pallas timing is tagged with its ``mode``; cross-mode
+speedup fields are only emitted on real hardware, and interpret-mode
+Pallas wall-clocks are skipped entirely unless ``--include-interpret``
+is passed (same-mode kernel-vs-kernel ratios, e.g. banded vs dense grid,
+are always reported — the grid is what they measure).
+
 CPU runtime knobs (set before jax import, override via env): the legacy
 XLA:CPU runtime + single-thread eigen minimise per-op overhead for the
 tiny-op graphs this benchmark times, and the ``rbg`` PRNG keeps key
@@ -46,6 +59,7 @@ os.environ.setdefault(
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import argparse
+import functools
 import json
 import time
 
@@ -59,6 +73,14 @@ import numpy as np
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_round.json")
 AGG_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_agg.json")
+ATTN_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_attn.json")
+
+
+def _pallas_mode() -> str:
+    """How Pallas kernels execute on this backend (tags every Pallas
+    wall-clock so interpret numbers are never mistaken for native)."""
+    return "native" if jax.default_backend() == "tpu" else "interpret"
 
 
 def _best_of(fn, reps: int) -> float:
@@ -173,7 +195,8 @@ def bench_aggregators(rounds: int, reps: int = 3) -> dict:
 # ---------------------------------------------------------------------------
 # 2. aggregation: jnp vs Pallas reduce; loop vs vmapped flatten
 # ---------------------------------------------------------------------------
-def bench_aggregation(c: int = 32, p: int = 1_000_000, reps: int = 5) -> dict:
+def bench_aggregation(c: int = 32, p: int = 1_000_000, reps: int = 5,
+                      include_interpret: bool = False) -> dict:
     from repro.core import fedavg_stacked, normalize_weights
     from repro.kernels import fedavg_reduce
     from repro.utils.pytree import tree_flatten_to_vector, tree_ravel_clients
@@ -186,8 +209,15 @@ def bench_aggregation(c: int = 32, p: int = 1_000_000, reps: int = 5) -> dict:
     jnp_reduce = jax.jit(lambda s, w: fedavg_stacked({"x": s}, w)["x"])
     jnp_reduce(stacked, w)
     t_jnp = _best_of(lambda: jnp_reduce(stacked, w), reps)
-    fedavg_reduce(stacked, w)
-    t_pallas = _best_of(lambda: fedavg_reduce(stacked, w), reps)
+    mode = _pallas_mode()
+    # interpret-mode Pallas wall-clock vs compiled jnp is a meaningless
+    # cross-mode comparison: skip it unless explicitly requested
+    if mode == "native" or include_interpret:
+        fedavg_reduce(stacked, w)
+        t_pallas = _best_of(lambda: fedavg_reduce(stacked, w), reps)
+    else:
+        t_pallas = None
+        mode = "interpret (skipped; pass --include-interpret)"
 
     # flatten path: a client-stacked tree with 1e6 params over 16 leaves
     leaves = 16
@@ -215,10 +245,14 @@ def bench_aggregation(c: int = 32, p: int = 1_000_000, reps: int = 5) -> dict:
         "clients": c, "params": p,
         "jnp_reduce_us": t_jnp * 1e6,
         "jnp_reduce_gbps": gb / t_jnp,
-        "pallas_reduce_us": t_pallas * 1e6,
-        "pallas_reduce_gbps": gb / t_pallas,
-        "pallas_mode": ("interpret (CPU validation)"
-                        if jax.default_backend() != "tpu" else "native"),
+        "pallas_reduce_us": t_pallas * 1e6 if t_pallas else None,
+        "pallas_reduce_gbps": gb / t_pallas if t_pallas else None,
+        # speedup vs jnp is a same-mode comparison only (native Pallas
+        # vs compiled jnp); never emitted for interpret-mode timings
+        "pallas_vs_jnp_speedup": (t_jnp / t_pallas
+                                  if t_pallas and _pallas_mode() == "native"
+                                  else None),
+        "pallas_mode": mode,
         "loop_flatten_us": t_loop * 1e6,
         "vmapped_flatten_us": t_vmap * 1e6,
         "flatten_speedup": t_loop / t_vmap,
@@ -226,8 +260,9 @@ def bench_aggregation(c: int = 32, p: int = 1_000_000, reps: int = 5) -> dict:
         "vmapped_flatten_cold_s": t_vmap_cold,
         "flatten_cold_speedup": t_loop_cold / t_vmap_cold,
     }
+    pallas_str = (f"{gb / t_pallas:.2f} GB/s" if t_pallas else "skipped")
     print(f"aggregation/reduce: jnp {gb / t_jnp:.2f} GB/s, "
-          f"pallas[{result['pallas_mode']}] {gb / t_pallas:.2f} GB/s")
+          f"pallas[{result['pallas_mode']}] {pallas_str}")
     print(f"aggregation/flatten: loop {t_loop * 1e6:,.0f} us, "
           f"vmapped {t_vmap * 1e6:,.0f} us "
           f"({result['flatten_speedup']:.2f}x steady, "
@@ -264,14 +299,103 @@ def bench_gpo_grid(s: int = 512, m: int = 8, b: int = 32, h: int = 4,
         "tiles_visited_ratio": banded_tiles / full_tiles,
         "banded_us": t_banded * 1e6,
         "full_grid_us": t_full * 1e6,
+        # same-mode kernel-vs-kernel ratio: meaningful in either mode
         "wallclock_speedup": t_full / t_banded,
-        "mode": ("interpret (CPU validation)"
-                 if jax.default_backend() != "tpu" else "native"),
+        "mode": _pallas_mode(),
     }
     print(f"gpo_grid: tiles {banded_tiles}/{full_tiles} "
           f"(ratio {result['tiles_visited_ratio']:.3f}), wall "
           f"{t_banded * 1e6:,.0f} vs {t_full * 1e6:,.0f} us "
           f"({result['wallclock_speedup']:.2f}x, {result['mode']})")
+    return result
+
+
+# ---------------------------------------------------------------------------
+# 4. fwd+bwd attention: dense autodiff vs the banded custom-VJP kernels
+# ---------------------------------------------------------------------------
+ATTN_SHAPES = [
+    # (s, m, block): the t >> m eval/train regimes the banded grid targets
+    (512, 8, 32),
+    (512, 32, 32),
+    (256, 16, 32),
+]
+
+
+def bench_attn_fwd_bwd(h: int = 4, hd: int = 32, reps: int = 3,
+                       include_interpret: bool = False) -> dict:
+    """Training-hot-path benchmark (DESIGN.md §8): value_and_grad of a
+    scalar loss through (a) the dense masked-softmax jnp path (what
+    ``use_pallas_attention=False`` trains with), (b) the banded
+    custom-VJP kernel, (c) the full predicated grid under the same
+    custom VJP. Banded-vs-dense-grid is a same-mode comparison and is
+    always reported; kernel-vs-jnp wall-clock only on real hardware."""
+    from repro.kernels import gpo_attention
+    from repro.kernels.gpo_attention import (
+        gpo_tile_counts,
+        gpo_tile_counts_bwd,
+    )
+    from repro.kernels.ref import ref_gpo_attention
+
+    mode = _pallas_mode()
+    result = {"heads": h, "head_dim": hd, "mode": mode, "shapes": []}
+    for s, m, b in ATTN_SHAPES:
+        key = jax.random.PRNGKey(2)
+        q = jax.random.normal(key, (s, h, hd))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (s, h, hd))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (s, h, hd))
+        cot = jax.random.normal(jax.random.fold_in(key, 3), (s, h, hd))
+
+        def make_loss(attn):
+            return jax.jit(jax.value_and_grad(
+                lambda q, k, v: jnp.vdot(attn(q, k, v), cot),
+                argnums=(0, 1, 2)))
+
+        jnp_fn = make_loss(lambda q, k, v: ref_gpo_attention(
+            q.transpose(1, 0, 2), k.transpose(1, 0, 2),
+            v.transpose(1, 0, 2), num_ctx=m).transpose(1, 0, 2))
+        banded_fn = make_loss(functools.partial(
+            gpo_attention, num_ctx=m, bq=b, bk=b, banded=True))
+        full_fn = make_loss(functools.partial(
+            gpo_attention, num_ctx=m, bq=b, bk=b, banded=False))
+
+        jnp_fn(q, k, v)
+        t_jnp = _best_of(lambda: jnp_fn(q, k, v), reps)
+        banded_fn(q, k, v)
+        t_banded = _best_of(lambda: banded_fn(q, k, v), reps)
+        full_fn(q, k, v)
+        t_full = _best_of(lambda: full_fn(q, k, v), reps)
+
+        fwd_banded, fwd_full = gpo_tile_counts(s, m, b, b)
+        bwd_banded, bwd_full = gpo_tile_counts_bwd(s, m, b, b)
+        entry = {
+            "seq": s, "num_ctx": m, "num_tgt": s - m, "block": b,
+            "fwd_tiles": {"banded": fwd_banded, "dense_grid": fwd_full},
+            "bwd_tiles": {"banded": bwd_banded, "dense_grid": bwd_full},
+            "fwd_bwd_tiles": {"banded": fwd_banded + bwd_banded,
+                              "dense_grid": fwd_full + bwd_full},
+            "tiles_visited_ratio": (fwd_banded + bwd_banded)
+            / (fwd_full + bwd_full),
+            "jnp_dense_fwd_bwd_us": t_jnp * 1e6,
+            "banded_fwd_bwd_us": (t_banded * 1e6
+                                  if mode == "native" or include_interpret
+                                  else None),
+            "dense_grid_fwd_bwd_us": (t_full * 1e6
+                                      if mode == "native" or include_interpret
+                                      else None),
+            # same-mode ratio (both sides run the identical custom-VJP
+            # machinery; only the visited grid differs)
+            "speedup_vs_dense_grid": t_full / t_banded,
+            # cross-mode ratio: only honest when the kernels are native
+            "speedup_vs_jnp_dense": (t_jnp / t_banded
+                                     if mode == "native" else None),
+        }
+        result["shapes"].append(entry)
+        print(f"attn_fwd_bwd s={s} m={m}: tiles "
+              f"{entry['fwd_bwd_tiles']['banded']}/"
+              f"{entry['fwd_bwd_tiles']['dense_grid']} "
+              f"(ratio {entry['tiles_visited_ratio']:.3f}), banded "
+              f"{entry['speedup_vs_dense_grid']:.2f}x vs dense grid "
+              f"({mode})")
     return result
 
 
@@ -283,6 +407,14 @@ def main() -> None:
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--skip-agg", action="store_true",
                     help="skip the aggregator sweep / BENCH_agg.json")
+    ap.add_argument("--skip-attn", action="store_true",
+                    help="skip the fwd+bwd attention benchmark / "
+                         "BENCH_attn.json (the slowest section in "
+                         "interpret mode; quick round-engine iteration)")
+    ap.add_argument("--include-interpret", action="store_true",
+                    help="also time Pallas kernels in interpret mode on "
+                         "CPU (absolute numbers are NOT comparable to "
+                         "compiled jnp; tagged mode=interpret)")
     args = ap.parse_args()
 
     report = {
@@ -290,12 +422,25 @@ def main() -> None:
         "xla_flags": os.environ.get("XLA_FLAGS", ""),
         "prng": "rbg",
         "round_engine": bench_round_engine(args.rounds, args.reps),
-        "aggregation": bench_aggregation(reps=args.reps),
+        "aggregation": bench_aggregation(
+            reps=args.reps, include_interpret=args.include_interpret),
         "gpo_attention": bench_gpo_grid(),
     }
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {os.path.abspath(OUT_PATH)}")
+
+    if not args.skip_attn:
+        attn_report = {
+            "backend": jax.default_backend(),
+            "xla_flags": os.environ.get("XLA_FLAGS", ""),
+            "prng": "rbg",
+            "attn_fwd_bwd": bench_attn_fwd_bwd(
+                reps=args.reps, include_interpret=args.include_interpret),
+        }
+        with open(ATTN_OUT_PATH, "w") as f:
+            json.dump(attn_report, f, indent=2)
+        print(f"wrote {os.path.abspath(ATTN_OUT_PATH)}")
 
     if not args.skip_agg:
         agg_report = {

@@ -163,9 +163,11 @@ class GPOConfig:
     # else sigma=1 and Eq. 1's NLL reduces to MSE (GPO's practice).
     learn_sigma: bool = False
     param_dtype: str = "float32"
-    # use the Pallas neural-process attention kernel for INFERENCE
-    # (interpret mode on CPU; native on TPU). The kernel has no custom
-    # VJP, so training keeps the jnp path. False = jnp everywhere.
+    # use the Pallas neural-process attention kernel (interpret mode on
+    # CPU; native on TPU) for BOTH inference and training: the kernel
+    # carries a flash-style custom VJP (DESIGN.md §8), so gpo_loss under
+    # jax.grad runs the banded forward/backward grids instead of the
+    # dense masked-softmax einsum. False = jnp everywhere.
     use_pallas_attention: bool = False
     # unroll factor for the depth scan in gpo_apply. The while-loop (and
     # its transpose in the backward pass) is pure overhead at the paper's
@@ -257,7 +259,23 @@ class FedConfig:
     # server-aggregation strategy (DESIGN.md §7); the default AggConfig
     # is the paper's Eq. 2-3 FedAvg.
     agg: AggConfig = AggConfig()
+    # runtime-level override of GPOConfig.use_pallas_attention: None
+    # defers to the model config; True/False forces the attention path
+    # for every engine built from this FedConfig (FederatedGPO,
+    # make_sharded_round, CentralizedGPO, the --gpo-fed dryrun) without
+    # editing the model config it was handed.
+    use_pallas_attention: Optional[bool] = None
     seed: int = 0
+
+    def resolve_gpo(self, gpo_cfg: GPOConfig) -> GPOConfig:
+        """GPOConfig with this runtime's overrides applied — the single
+        plumbing point every training engine calls before tracing."""
+        if (self.use_pallas_attention is not None
+                and self.use_pallas_attention
+                != gpo_cfg.use_pallas_attention):
+            gpo_cfg = replace(
+                gpo_cfg, use_pallas_attention=self.use_pallas_attention)
+        return gpo_cfg
 
 
 @dataclass(frozen=True)

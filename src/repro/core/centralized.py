@@ -23,6 +23,7 @@ class CentralizedGPO:
     def __init__(self, gpo_cfg: GPOConfig, fed_cfg: FedConfig,
                  data: SurveyData, train_groups: np.ndarray,
                  eval_groups: np.ndarray):
+        gpo_cfg = fed_cfg.resolve_gpo(gpo_cfg)  # runtime attention override
         self.gpo_cfg, self.fed_cfg, self.data = gpo_cfg, fed_cfg, data
         self.train_groups = jnp.asarray(train_groups, jnp.int32)
         self.eval_groups = jnp.asarray(eval_groups, jnp.int32)

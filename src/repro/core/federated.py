@@ -144,6 +144,7 @@ class FederatedGPO:
     def __init__(self, gpo_cfg: GPOConfig, fed_cfg: FedConfig,
                  data: SurveyData, train_groups: np.ndarray,
                  eval_groups: np.ndarray):
+        gpo_cfg = fed_cfg.resolve_gpo(gpo_cfg)  # runtime attention override
         assert gpo_cfg.d_embed == data.phi.shape[-1]
         self.gpo_cfg, self.fed_cfg, self.data = gpo_cfg, fed_cfg, data
         self.train_groups = jnp.asarray(train_groups, jnp.int32)
@@ -378,6 +379,7 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
+    gpo_cfg = fed_cfg.resolve_gpo(gpo_cfg)  # runtime attention override
     opt = opt or adam(fed_cfg.lr)
     if agg is None:
         agg = make_aggregator(fed_cfg.agg, num_clients=fed_cfg.num_clients,

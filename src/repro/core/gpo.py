@@ -96,7 +96,6 @@ def gpo_apply(params: dict, cfg: GPOConfig, ctx_x, ctx_y, tgt_x):
     tokens = jnp.concatenate([ctx_tok, tgt_tok], axis=0)  # (S, d_embed+2)
 
     x = tokens @ params["in_proj"]  # (S, d)
-    mask = _np_mask(m, t)
     h_dim = cfg.head_dim
     nh = cfg.num_heads
 
@@ -108,13 +107,17 @@ def gpo_apply(params: dict, cfg: GPOConfig, ctx_x, ctx_y, tgt_x):
         k = (h @ layer.wk).reshape(s, nh, h_dim)
         v = (h @ layer.wv).reshape(s, nh, h_dim)
         if cfg.use_pallas_attention:
+            # banded flash kernel with a custom VJP (DESIGN.md §4, §8):
+            # valid under jax.grad, so training (gpo_loss) and inference
+            # share the same tiled path — the dense (heads, S, S) score
+            # tensor below is never materialized.
             from repro.kernels import gpo_attention
 
             att = gpo_attention(q, k, v, num_ctx=m).reshape(s, -1)
         else:
             scores = jnp.einsum("ihd,jhd->hij", q, k) / jnp.sqrt(
                 jnp.asarray(h_dim, jnp.float32))
-            scores = jnp.where(mask[None], scores, NEG_INF)
+            scores = jnp.where(_np_mask(m, t)[None], scores, NEG_INF)
             probs = jax.nn.softmax(scores.astype(jnp.float32),
                                    axis=-1).astype(v.dtype)
             att = jnp.einsum("hij,jhd->ihd", probs, v).reshape(s, -1)

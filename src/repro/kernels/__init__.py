@@ -1,7 +1,8 @@
 # Pallas TPU kernels for the compute hot spots: flash attention (backbone),
-# GPO neural-process attention (the paper's module), Mamba2 SSD scan, and
-# the server-aggregation reductions (Eq. 3 FedAvg plus the generalized
-# delta-moment and rank-trim kernels, DESIGN.md §7).
+# GPO neural-process attention (the paper's module; differentiable via a
+# flash-style custom VJP on the banded grid, DESIGN.md §8), Mamba2 SSD
+# scan, and the server-aggregation reductions (Eq. 3 FedAvg plus the
+# generalized delta-moment and rank-trim kernels, DESIGN.md §7).
 from repro.kernels.ops import (  # noqa: F401
     agg_momentum_reduce,
     agg_trimmed_reduce,

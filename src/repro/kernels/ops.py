@@ -64,10 +64,14 @@ def gpo_attention(q, k, v, *, num_ctx: int, bq: int = 128, bk: int = 128,
                   interpret: bool | None = None, banded: bool = True):
     """GPO layout: q/k/v (S, H, hd) -> (S, H, hd); neural-process mask.
 
-    Padding appends masked-out target rows (they only self-attend, so real
-    outputs are unaffected). ``banded`` selects the O(S*m + S) grid that
-    only visits context-band + diagonal tiles (needs bq == bk; falls back
-    to the full predicated grid otherwise)."""
+    Differentiable: the kernel carries a flash-style custom VJP
+    (DESIGN.md §8), so this wrapper is safe on the training hot path
+    (``gpo_loss`` under ``jax.grad``) as well as in inference. Padding
+    appends masked-out target rows (they only self-attend and their
+    cotangents are zero after the slice, so real outputs and gradients
+    are unaffected). ``banded`` selects the O(S*m + S) grid that only
+    visits context-band + diagonal tiles (needs bq == bk; falls back to
+    the full predicated grid otherwise)."""
     if interpret is None:
         interpret = _interpret_default()
     s_orig = q.shape[0]

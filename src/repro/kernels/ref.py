@@ -46,6 +46,33 @@ def ref_gpo_attention(q, k, v, *, num_ctx: int):
     return jnp.einsum("hqk,hkd->hqd", probs.astype(v.dtype), v)
 
 
+def ref_gpo_attention_grads(q, k, v, do, *, num_ctx: int):
+    """(dq, dk, dv) for the neural-process attention, written out as the
+    textbook softmax-attention gradient formulas (dense (h, S, S)
+    intermediates, no autodiff, no flash recompute) — deliberately
+    independent from both ``jax.grad`` of the oracle and the custom-VJP
+    kernels it validates."""
+    h, s, hd = q.shape
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    scale = 1.0 / np.sqrt(hd)
+    scores = jnp.einsum("hqd,hkd->hqk", qf, kf) * scale
+    kpos = jnp.arange(s)[None, :]
+    qpos = jnp.arange(s)[:, None]
+    mask = (kpos < num_ctx) | (kpos == qpos)
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    dv = jnp.einsum("hqk,hqd->hkd", p, dof)
+    dp = jnp.einsum("hqd,hkd->hqk", dof, vf)
+    delta = jnp.sum(dp * p, axis=-1, keepdims=True)  # = rowsum(do * o)
+    ds = p * (dp - delta) * scale
+    dq = jnp.einsum("hqk,hkd->hqd", ds, kf)
+    dk = jnp.einsum("hqk,hqd->hkd", ds, qf)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
 def ref_ssd(x, dt, A_log, B, C, D):
     """Step-by-step SSD recurrence (the definition, O(S) sequential).
 

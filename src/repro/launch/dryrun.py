@@ -169,12 +169,17 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 
 def lower_gpo_round(agg_name: str, *, clients: int = 8,
-                    use_pallas: bool = False, verbose: bool = True) -> dict:
+                    use_pallas: bool = False,
+                    use_pallas_attention: bool = False,
+                    verbose: bool = True) -> dict:
     """Compile the shard_map federated GPO round for one aggregation
     strategy on a ``clients``-device 'data' mesh and report its
     collective schedule (DESIGN.md §7): linear strategies must show ONE
     parameter-sized all-reduce (the weighted delta psum); the robust
-    strategies an all-gather of the flat client-delta matrix instead."""
+    strategies an all-gather of the flat client-delta matrix instead.
+    ``use_pallas_attention`` routes every local epoch's fwd+bwd through
+    the banded custom-VJP attention kernels (DESIGN.md §8) so the
+    compiled schedule reflects the fused training hot path."""
     from jax.sharding import NamedSharding
     from repro.configs import AggConfig, FedConfig, GPOConfig
     from repro.core import make_aggregator
@@ -192,7 +197,8 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
                      d_ff=32)
     fcfg = FedConfig(num_clients=clients, local_epochs=2, num_context=6,
                      num_target=6, agg=AggConfig(name=agg_name),
-                     use_pallas_aggregation=use_pallas)
+                     use_pallas_aggregation=use_pallas,
+                     use_pallas_attention=use_pallas_attention)
     opt = adam(fcfg.lr)
     agg = make_aggregator(fcfg.agg, num_clients=clients,
                           use_pallas=use_pallas)
@@ -222,6 +228,7 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
         "agg": agg_name,
         "clients": clients,
         "use_pallas_aggregation": use_pallas,
+        "use_pallas_attention": use_pallas_attention,
         "linear": agg.linear,
         "compile_s": round(time.time() - t0, 1),
         "collective_bytes_by_kind": dict(coll.bytes_by_kind),
@@ -247,6 +254,9 @@ def main() -> None:
                     help="aggregation strategy for --gpo-fed")
     ap.add_argument("--clients", type=int, default=8,
                     help="client-mesh size for --gpo-fed")
+    ap.add_argument("--pallas-attn", action="store_true",
+                    help="route --gpo-fed local training through the "
+                         "banded custom-VJP attention kernels")
     ap.add_argument("--out", default=None, help="append result as json line")
     args = ap.parse_args()
     if not args.gpo_fed and not (args.arch and args.shape):
@@ -255,7 +265,8 @@ def main() -> None:
             else f"{args.arch} x {args.shape} multi_pod={args.multi_pod}")
     try:
         if args.gpo_fed:
-            result = lower_gpo_round(args.agg, clients=args.clients)
+            result = lower_gpo_round(args.agg, clients=args.clients,
+                                     use_pallas_attention=args.pallas_attn)
         else:
             result = lower_pair(args.arch, args.shape,
                                 multi_pod=args.multi_pod)

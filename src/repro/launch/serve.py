@@ -110,13 +110,20 @@ def serve_gpo(args) -> None:
     groups = jnp.asarray(
         np.resize(ev, args.batch), jnp.int32)
     keys = jax.random.split(key, args.batch)
+    # warm up before timing: the first call pays the JIT trace+compile,
+    # which is not per-request serving latency. Report both separately.
     t0 = time.time()
-    pred, truth = predict_batch(keys, groups)
+    jax.block_until_ready(predict_batch(keys, groups))
+    t_compile = time.time() - t0
+    t0 = time.time()
+    pred, truth = jax.block_until_ready(predict_batch(keys, groups))
     dt = time.time() - t0
     from repro.core.fairness import alignment_score
 
     scores = jax.vmap(alignment_score)(pred, truth)
-    print(f"served {args.batch} group-preference requests in {dt*1e3:.1f}ms")
+    print(f"compile+first-call: {t_compile*1e3:.1f}ms (one-time)")
+    print(f"served {args.batch} group-preference requests in {dt*1e3:.1f}ms "
+          f"steady-state ({dt*1e3/args.batch:.2f}ms/request)")
     for i in range(min(args.batch, 4)):
         print(f"  group {int(groups[i])}: AS={float(scores[i]):.4f} "
               f"pred[0]={np.round(np.asarray(pred[i][0]), 3).tolist()}")

@@ -22,7 +22,7 @@ GCFG = GPOConfig(d_embed=24, d_model=48, num_layers=2, num_heads=4, d_ff=96)
 
 
 def _make_fed(batch_groups=0, use_pallas_aggregation=False, seed=5,
-              agg=AggConfig()):
+              agg=AggConfig(), use_pallas_attention=None):
     data = make_survey_data(SurveyConfig(
         num_groups=8, num_questions=40, d_embed=24, seed=seed))
     tr, ev = split_groups(data, seed=seed)
@@ -30,6 +30,7 @@ def _make_fed(batch_groups=0, use_pallas_aggregation=False, seed=5,
                      eval_every=2, num_context=6, num_target=6,
                      batch_groups=batch_groups,
                      use_pallas_aggregation=use_pallas_aggregation,
+                     use_pallas_attention=use_pallas_attention,
                      agg=agg, seed=seed)
     return FederatedGPO(GCFG, fcfg, data, tr, ev)
 
@@ -131,6 +132,26 @@ def test_scan_carries_server_optimizer_state():
     assert int(fed_scan.server_state.step) == 4
     fed_scan.run(rounds=3, log_every=2)  # chunked block + tail round
     assert int(fed_scan.server_state.step) == 7
+
+
+@pytest.mark.slow
+def test_scan_engine_matches_loop_with_pallas_attention():
+    """Both round drivers differentiate THROUGH the banded custom-VJP
+    attention kernels (DESIGN.md §8) when the runtime override is set:
+    scan == loop, and both == the dense-attention run (same math)."""
+    fed_loop = _make_fed(use_pallas_attention=True)
+    assert fed_loop.gpo_cfg.use_pallas_attention  # override reached cfg
+    hist_loop = fed_loop.run(rounds=3, engine="loop")
+    fed_scan = _make_fed(use_pallas_attention=True)
+    hist_scan = fed_scan.run(rounds=3, engine="scan")
+    _assert_hist_close(hist_loop, hist_scan)
+    for a, b in zip(jax.tree.leaves(fed_loop.global_params),
+                    jax.tree.leaves(fed_scan.global_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
+    hist_dense = _make_fed().run(rounds=3, engine="scan")
+    _assert_hist_close(hist_dense, hist_scan,
+                       tol=dict(rtol=1e-3, atol=1e-4))
 
 
 def test_pallas_aggregation_round_path_matches_stacked():
