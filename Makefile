@@ -3,7 +3,7 @@
 # @pytest.mark.slow so the quick suite stays under a few minutes.
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast bench bench-round
+.PHONY: test test-fast test-priv test-cov bench bench-round bench-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -11,14 +11,26 @@ test:
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
 
+# quick iteration on the DP delta pipeline + property suite only
+# (tests/test_privacy.py, tests/test_property.py, DESIGN.md §9)
+test-priv:
+	$(PY) -m pytest -q tests/test_privacy.py tests/test_property.py
+
+# tier-1 suite under pytest-cov (the CI job uploads coverage.xml as a
+# non-gating artifact; requires pytest-cov from requirements-dev.txt)
+test-cov:
+	$(PY) -m pytest -x -q --cov=repro --cov-report=term \
+		--cov-report=xml:coverage.xml
+
 bench-round:
 	$(PY) -m benchmarks.bench_round
 
 # reduced-config benchmark pass for the CI smoke job: exercises every
 # BENCH_*.json writer (round engine, aggregator sweep, attention
-# fwd+bwd) in a few minutes
+# fwd+bwd, DP delta pipeline) in a few minutes
 bench-smoke:
-	$(PY) -m benchmarks.bench_round --rounds 30 --agg-rounds 10 --reps 2
+	$(PY) -m benchmarks.bench_round --rounds 30 --agg-rounds 10 --reps 2 \
+		--privacy --priv-rounds 30
 
 bench:
 	$(PY) -m benchmarks.run

@@ -32,6 +32,13 @@ dense jnp autodiff vs the banded custom-VJP kernels (DESIGN.md §8) —
 and writes ``BENCH_attn.json``: fwd and bwd visited-tile counts (banded
 strictly below the dense grid) and wall-clock at t >> m shapes.
 
+A sixth section (``--privacy``) benchmarks the DP client-delta pipeline
+(DESIGN.md §9) and writes ``BENCH_priv.json``: the (C, P) clip+reduce
+micro-bench — baseline unclipped jnp reduce vs the jnp clip path vs the
+fused Pallas ``agg_clip_reduce`` kernel — plus the engine-level
+overhead (private vs baseline rounds/sec through the fused scan driver)
+and the accountant's final ε.
+
 Interpret-mode honesty: on CPU the Pallas kernels run in interpret mode,
 whose absolute timings are meaningless next to compiled jnp (≈1000x
 slow). Every Pallas timing is tagged with its ``mode``; cross-mode
@@ -75,6 +82,8 @@ AGG_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_agg.json")
 ATTN_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                              "BENCH_attn.json")
+PRIV_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_priv.json")
 
 
 def _pallas_mode() -> str:
@@ -399,6 +408,110 @@ def bench_attn_fwd_bwd(h: int = 4, hd: int = 32, reps: int = 3,
     return result
 
 
+# ---------------------------------------------------------------------------
+# 5. DP delta pipeline: clip+reduce kernel and engine-level overhead
+# ---------------------------------------------------------------------------
+def bench_privacy(rounds: int, c: int = 32, p: int = 1_000_000,
+                  reps: int = 3, include_interpret: bool = False) -> dict:
+    """Clipped-Pallas vs clipped-jnp vs unclipped baseline (DESIGN.md §9).
+
+    Micro: the (C, P) flat-delta reduction — the unclipped jnp weighted
+    sum (the pre-privacy hot path), the jnp clip+reduce
+    (``clip_noise_reduce`` with use_pallas=False), and the fused
+    ``agg_clip_reduce`` kernel. The fused kernel's wall-clock follows
+    the interpret-honesty rule: timed (and compared to jnp) only when it
+    lowers natively, tagged otherwise.
+
+    Engine: rounds/sec of the fused scan driver with clip+noise on vs
+    the non-private baseline, plus the Rényi accountant's ε after the
+    run — the end-to-end price of the privacy axis.
+    """
+    from repro.configs import (AggConfig, FedConfig, GPOConfig,
+                               PrivacyConfig)
+    from repro.core import FederatedGPO
+    from repro.core.privacy import clip_noise_reduce
+    from repro.data import SurveyConfig, make_survey_data, split_groups
+    from repro.kernels import agg_clip_reduce
+
+    priv = PrivacyConfig(clip_norm=1.0, noise_multiplier=0.0)
+    key = jax.random.PRNGKey(3)
+    stacked = jax.random.normal(key, (c, p))
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (c,)))
+    keys = jax.random.split(jax.random.fold_in(key, 2), c)
+    gb = c * p * 4 / 1e9
+
+    base_fn = jax.jit(lambda s, w: jnp.einsum("c,cp->p", w, s))
+    base_fn(stacked, w)
+    t_base = _best_of(lambda: base_fn(stacked, w), reps)
+    jnp_fn = jax.jit(functools.partial(clip_noise_reduce, privacy=priv,
+                                       use_pallas=False))
+    jnp_fn(stacked, w, keys)
+    t_jnp = _best_of(lambda: jnp_fn(stacked, w, keys), reps)
+    mode = _pallas_mode()
+    if mode == "native" or include_interpret:
+        agg_clip_reduce(stacked, w, clip=priv.clip_norm)
+        t_pal = _best_of(
+            lambda: agg_clip_reduce(stacked, w, clip=priv.clip_norm), reps)
+    else:
+        t_pal = None
+        mode = "interpret (skipped; pass --include-interpret)"
+
+    result = {
+        "clip_reduce": {
+            "clients": c, "params": p, "clip": priv.clip_norm,
+            "baseline_us": t_base * 1e6,
+            "baseline_gbps": gb / t_base,
+            "jnp_clip_us": t_jnp * 1e6,
+            "jnp_clip_gbps": gb / t_jnp,
+            "clip_overhead_vs_baseline": t_jnp / t_base,
+            "pallas_clip_us": t_pal * 1e6 if t_pal else None,
+            "pallas_clip_gbps": gb / t_pal if t_pal else None,
+            # cross-mode comparisons only on real hardware
+            "pallas_vs_jnp_speedup": (t_jnp / t_pal
+                                      if t_pal and _pallas_mode() == "native"
+                                      else None),
+            "pallas_mode": mode,
+        },
+    }
+    pal_str = f"{gb / t_pal:.2f} GB/s" if t_pal else "skipped"
+    print(f"privacy/clip_reduce: baseline {gb / t_base:.2f} GB/s, "
+          f"jnp clip {gb / t_jnp:.2f} GB/s, "
+          f"pallas[{result['clip_reduce']['pallas_mode']}] {pal_str}")
+
+    # engine-level overhead at the round-engine benchmark's model scale
+    data = make_survey_data(SurveyConfig(
+        num_groups=17, num_questions=16, d_embed=4, seed=0))
+    train_groups, eval_groups = split_groups(data, train_frac=0.6, seed=0)
+    gcfg = GPOConfig(d_embed=4, d_model=8, num_layers=1, num_heads=1,
+                     d_ff=16)
+    engine = {"rounds": rounds}
+    for label, pcfg in (
+            ("baseline", PrivacyConfig()),
+            ("private", PrivacyConfig(clip_norm=0.5,
+                                      noise_multiplier=1.0))):
+        fcfg = FedConfig(num_clients=len(train_groups), rounds=rounds,
+                         local_epochs=6, eval_every=10, num_context=1,
+                         num_target=1, agg=AggConfig(), privacy=pcfg)
+        fed = FederatedGPO(gcfg, fcfg, data, train_groups, eval_groups)
+        hist = fed.run(rounds=rounds)  # compile + warm
+        dt = _best_of(lambda: fed.run(rounds=rounds), reps)
+        engine[f"{label}_rounds_per_sec"] = rounds / dt
+        if label == "private":
+            engine["clip"] = pcfg.clip_norm
+            engine["noise_multiplier"] = pcfg.noise_multiplier
+            engine["final_eps"] = hist.round_eps[-1]
+    engine["private_overhead_frac"] = (
+        engine["baseline_rounds_per_sec"]
+        / engine["private_rounds_per_sec"] - 1.0)
+    result["round_engine"] = engine
+    print(f"privacy/round_engine: baseline "
+          f"{engine['baseline_rounds_per_sec']:,.1f} r/s, private "
+          f"{engine['private_rounds_per_sec']:,.1f} r/s "
+          f"({100 * engine['private_overhead_frac']:.1f}% overhead, "
+          f"eps={engine['final_eps']:.2f})")
+    return result
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=200)
@@ -411,6 +524,11 @@ def main() -> None:
                     help="skip the fwd+bwd attention benchmark / "
                          "BENCH_attn.json (the slowest section in "
                          "interpret mode; quick round-engine iteration)")
+    ap.add_argument("--privacy", action="store_true",
+                    help="also run the DP delta-pipeline benchmark and "
+                         "write BENCH_priv.json (DESIGN.md §9)")
+    ap.add_argument("--priv-rounds", type=int, default=100,
+                    help="rounds per engine config in the privacy bench")
     ap.add_argument("--include-interpret", action="store_true",
                     help="also time Pallas kernels in interpret mode on "
                          "CPU (absolute numbers are NOT comparable to "
@@ -441,6 +559,19 @@ def main() -> None:
         with open(ATTN_OUT_PATH, "w") as f:
             json.dump(attn_report, f, indent=2)
         print(f"wrote {os.path.abspath(ATTN_OUT_PATH)}")
+
+    if args.privacy:
+        priv_report = {
+            "backend": jax.default_backend(),
+            "xla_flags": os.environ.get("XLA_FLAGS", ""),
+            "prng": "rbg",
+            "privacy": bench_privacy(
+                args.priv_rounds, reps=min(args.reps, 3),
+                include_interpret=args.include_interpret),
+        }
+        with open(PRIV_OUT_PATH, "w") as f:
+            json.dump(priv_report, f, indent=2)
+        print(f"wrote {os.path.abspath(PRIV_OUT_PATH)}")
 
     if not args.skip_agg:
         agg_report = {

@@ -2,10 +2,15 @@
 training driver. Four clients hold disjoint synthetic corpora; each round
 runs local LM steps and aggregates either full parameters or LoRA
 adapters (the paper's technique applied to backbone training) under any
-registry aggregation strategy (DESIGN.md §7).
+registry aggregation strategy (DESIGN.md §7). ``--clip-norm`` /
+``--noise-multiplier`` turn on the DP client-delta pipeline
+(DESIGN.md §9): adapters are clipped + noised before aggregation and
+the Rényi accountant's ε is printed alongside the losses.
 
   PYTHONPATH=src python examples/fedlora_finetune.py --rounds 150 \
       --local-steps 2 --mode lora --agg fedavgm
+  PYTHONPATH=src python examples/fedlora_finetune.py --rounds 50 \
+      --mode lora --clip-norm 0.5 --noise-multiplier 0.6
 """
 import argparse
 import time
@@ -14,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import AggConfig, get_arch, override
+from repro.configs import AggConfig, PrivacyConfig, get_arch, override
+from repro.core.privacy import make_accountant
 from repro.core import (
     AGGREGATORS,
     broadcast_to_clients,
@@ -54,6 +60,11 @@ def main() -> None:
                     choices=[n for n in AGGREGATORS.names()
                              if n != "fedprox"],
                     help="server-aggregation strategy (DESIGN.md §7)")
+    # DP client-delta pipeline (DESIGN.md §9): 0 = off
+    ap.add_argument("--clip-norm", type=float, default=0.0,
+                    help="per-client L2 clip on the flat delta (0 = off)")
+    ap.add_argument("--noise-multiplier", type=float, default=0.0,
+                    help="Gaussian noise std = z * clip-norm per client")
     args = ap.parse_args()
 
     cfg = hundred_m_config()
@@ -71,22 +82,30 @@ def main() -> None:
         global_batch=args.batch, seed=10 + i)) for i in range(c)]
 
     agg = make_aggregator(AggConfig(name=args.agg), num_clients=c)
+    priv = PrivacyConfig(clip_norm=args.clip_norm,
+                         noise_multiplier=args.noise_multiplier)
+    priv.validate()
+    if priv.enabled:
+        print(f"DP pipeline on: clip={priv.clip_norm} "
+              f"z={priv.noise_multiplier} (DESIGN.md §9)")
     if args.mode == "full":
         payload = params
         rnd = jax.jit(make_backbone_fedavg_round(cfg, opt, args.local_steps,
-                                                 agg=agg))
+                                                 agg=agg, privacy=priv))
     else:
         payload = init_lora(params, key, rank=8)
         print(f"LoRA payload: {lora_param_count(payload)/1e6:.2f}M params "
               f"({100*lora_param_count(payload)/count_params(cfg):.2f}% of "
               "the backbone) — the federated communication volume")
         rnd = jax.jit(make_fedlora_round(cfg, params, opt, args.local_steps,
-                                         agg=agg))
+                                         agg=agg, privacy=priv))
 
     client_state = broadcast_to_clients(payload, c)
     opt_states = jax.vmap(opt.init)(client_state)
     server_state = agg.init(payload)
 
+    accountant = make_accountant(priv, 1.0)  # full participation
+    noise_base = jax.random.PRNGKey(23)
     t0 = time.time()
     total_steps = 0
     for r in range(args.rounds):
@@ -95,12 +114,17 @@ def main() -> None:
             *[jax.tree.map(lambda *ys: jnp.stack(ys),
                            *[next(iters[i]) for _ in range(args.local_steps)])
               for i in range(c)])
-        client_state, opt_states, losses, server_state = rnd(
-            client_state, opt_states, batches, weights, server_state)
+        round_args = (client_state, opt_states, batches, weights,
+                      server_state)
+        if priv.enabled:
+            round_args += (jax.random.fold_in(noise_base, r),)
+        client_state, opt_states, losses, server_state = rnd(*round_args)
         total_steps += c * args.local_steps
         if r % max(1, args.rounds // 15) == 0:
+            eps = (f" eps={accountant.epsilon(r + 1):.3f}"
+                   if accountant else "")
             print(f"round {r:4d} ({total_steps:5d} client steps) "
-                  f"losses={np.round(np.asarray(losses), 4)}")
+                  f"losses={np.round(np.asarray(losses), 4)}{eps}")
     dt = time.time() - t0
     print(f"\n{args.rounds} rounds = {total_steps} client steps "
           f"in {dt:.0f}s; final mean loss "

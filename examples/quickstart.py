@@ -26,6 +26,11 @@ def main() -> None:
           f"{len(eval_groups)} held-out")
 
     # 2. Federated training: each group is a FedAvg client (paper §3).
+    #    For differentially-private training (DESIGN.md §9) add
+    #      privacy=PrivacyConfig(clip_norm=0.5, noise_multiplier=0.8)
+    #    (from repro.configs) — client deltas are then clipped + noised
+    #    before aggregation and hist.round_eps tracks the cumulative ε
+    #    from the Rényi accountant.
     gpo_cfg = GPOConfig(d_embed=data.phi.shape[-1])
     fed_cfg = FedConfig(num_clients=len(train_groups), rounds=150,
                         local_epochs=6, lr=3e-4, eval_every=25)

@@ -11,6 +11,7 @@ from repro.configs.base import (  # noqa: F401
     GPOConfig,
     InputShape,
     ModelConfig,
+    PrivacyConfig,
     TrainConfig,
     config_dict,
     get_arch,

@@ -181,6 +181,62 @@ class GPOConfig:
 
 
 @dataclass(frozen=True)
+class PrivacyConfig:
+    """Differential privacy on the client→server delta path (DESIGN.md §9).
+
+    The pipeline sits BETWEEN local training and the ``ServerAggregator``:
+    each client's flattened parameter delta is L2-clipped to ``clip_norm``
+    and perturbed with per-client Gaussian noise of standard deviation
+    ``noise_multiplier * clip_norm`` before any reduction, so it composes
+    with every registry strategy (the robust trims rank the *privatized*
+    deltas; the linear family reduces them — with
+    ``use_pallas_aggregation`` through the fused ``agg_clip_reduce``
+    kernel). ``clip_norm == 0`` disables the pipeline entirely: the
+    engines trace the exact pre-privacy computation (bit-equal, pinned by
+    tests/test_privacy.py).
+
+    Privacy accounting is the Rényi-DP moments accountant
+    (``core/privacy.py::RdpAccountant``): each round is one sampled
+    Gaussian mechanism with sampling rate q = batch_groups/num_clients
+    (1 under full participation), RDP composes linearly over rounds, and
+    the per-round ε at ``target_delta`` lands in ``History.round_eps``.
+    """
+
+    # per-client L2 clip norm S on the flattened delta; 0.0 disables the
+    # whole privacy pipeline (the exact pre-privacy trace)
+    clip_norm: float = 0.0
+    # Gaussian noise multiplier z: per-client noise std = z * clip_norm.
+    # 0.0 = clip-only (no DP guarantee; History.round_eps reports inf).
+    noise_multiplier: float = 0.0
+    # the δ at which the accountant converts accumulated RDP to ε
+    target_delta: float = 1e-5
+    # Rényi orders α the accountant tracks (integer-order sampled-
+    # Gaussian bound, Mironov et al. 2019)
+    accountant_orders: Tuple[int, ...] = tuple(range(2, 33)) + (
+        48, 64, 128, 256)
+
+    @property
+    def enabled(self) -> bool:
+        return self.clip_norm > 0.0
+
+    @property
+    def sigma(self) -> float:
+        """Per-client noise standard deviation (z * S)."""
+        return self.noise_multiplier * self.clip_norm
+
+    def validate(self) -> None:
+        if self.clip_norm < 0.0 or self.noise_multiplier < 0.0:
+            raise ValueError("clip_norm and noise_multiplier must be >= 0")
+        if self.noise_multiplier > 0.0 and self.clip_norm == 0.0:
+            raise ValueError(
+                "noise_multiplier > 0 requires clip_norm > 0: the noise "
+                "scale is z * clip_norm, and unclipped deltas have "
+                "unbounded sensitivity (no finite-σ DP guarantee exists)")
+        if not 0.0 < self.target_delta < 1.0:
+            raise ValueError("target_delta must lie in (0, 1)")
+
+
+@dataclass(frozen=True)
 class AggConfig:
     """Server-aggregation strategy (DESIGN.md §7).
 
@@ -259,6 +315,11 @@ class FedConfig:
     # server-aggregation strategy (DESIGN.md §7); the default AggConfig
     # is the paper's Eq. 2-3 FedAvg.
     agg: AggConfig = AggConfig()
+    # differential privacy on the client→server deltas (DESIGN.md §9):
+    # per-client L2 clip + Gaussian noise applied BEFORE the aggregator,
+    # with Rényi-DP accounting into History.round_eps. The default
+    # (clip_norm=0) traces the exact pre-privacy computation.
+    privacy: PrivacyConfig = PrivacyConfig()
     # runtime-level override of GPOConfig.use_pallas_attention: None
     # defers to the model config; True/False forces the attention path
     # for every engine built from this FedConfig (FederatedGPO,

@@ -21,6 +21,14 @@ from repro.core.aggregation import (  # noqa: F401
     make_aggregator,
 )
 from repro.core.federated import FederatedGPO, History, make_sharded_round  # noqa: F401
+from repro.core.privacy import (  # noqa: F401
+    RdpAccountant,
+    clip_noise_reduce,
+    clip_scales,
+    make_accountant,
+    private_delta_flat,
+    privatize_flat,
+)
 from repro.core.centralized import CentralizedGPO  # noqa: F401
 from repro.core import fairness  # noqa: F401
 from repro.core.lora import apply_lora, init_lora, lora_param_count  # noqa: F401

@@ -7,10 +7,13 @@ Round structure (faithful to the paper):
      preference data (in-context objective, Eq. 1; with
      ``AggConfig.prox_mu > 0`` a FedProx proximal term anchors the local
      model to the round's broadcast global);
-  3. clients transmit parameter *deltas*; the server reduces them and
-     applies the configured ``ServerAggregator`` update (DESIGN.md §7 —
-     the paper's Eq. 2-3 FedAvg is the default strategy) and
-     redistributes.
+  3. clients transmit parameter *deltas*; with ``FedConfig.privacy``
+     enabled each flat delta is L2-clipped and Gaussian-noised BEFORE it
+     leaves the client (DESIGN.md §9, ``core/privacy.py`` — the Rényi
+     accountant folds the per-round ε into ``History.round_eps``); the
+     server reduces the (privatized) deltas and applies the configured
+     ``ServerAggregator`` update (DESIGN.md §7 — the paper's Eq. 2-3
+     FedAvg is the default strategy) and redistributes.
 
 Two execution engines expose the same round semantics:
 
@@ -48,7 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig, GPOConfig
-from repro.core import fairness
+from repro.core import fairness, privacy as dp
 from repro.core.aggregation import ServerAggregator, make_aggregator
 from repro.core.fedavg import (
     broadcast_to_clients,
@@ -138,6 +141,11 @@ class History:
     eval_mean_as: list = field(default_factory=list)
     eval_fi: list = field(default_factory=list)
     eval_cov: list = field(default_factory=list)
+    # DP accounting (DESIGN.md §9): cumulative ε at PrivacyConfig.
+    # target_delta AFTER each round, counted across every `run` call on
+    # the trainer. Empty when the privacy pipeline is disabled; inf per
+    # round for clip-only runs (clipping alone carries no DP guarantee).
+    round_eps: list = field(default_factory=list)
 
 
 class FederatedGPO:
@@ -146,6 +154,7 @@ class FederatedGPO:
                  eval_groups: np.ndarray):
         gpo_cfg = fed_cfg.resolve_gpo(gpo_cfg)  # runtime attention override
         assert gpo_cfg.d_embed == data.phi.shape[-1]
+        fed_cfg.privacy.validate()
         self.gpo_cfg, self.fed_cfg, self.data = gpo_cfg, fed_cfg, data
         self.train_groups = jnp.asarray(train_groups, jnp.int32)
         self.eval_groups = jnp.asarray(eval_groups, jnp.int32)
@@ -171,7 +180,15 @@ class FederatedGPO:
         m = fed_cfg.batch_groups or num_clients
         m = min(m, num_clients)
 
+        # DP accounting (DESIGN.md §9): one sampled Gaussian mechanism
+        # per round at rate q = m/C; ε lands in History.round_eps on the
+        # host — the per-step RDP is constant, so no device state exists.
+        self._accountant = dp.make_accountant(fed_cfg.privacy,
+                                              m / num_clients)
+        self._rounds_elapsed = 0
+
         agg = self.agg
+        priv = fed_cfg.privacy
 
         def round_step(global_params, opt_states, server_state, key):
             k_sub, k_train = jax.random.split(key)
@@ -198,9 +215,29 @@ class FederatedGPO:
             # the server reduces over the client axis and applies its
             # stateful update (Eq. 3 FedAvg being the default strategy).
             deltas = tree_sub(new_client_params, client_params)
-            new_global, server_state = agg.step(
-                server_state, global_params, deltas, w, losses=losses,
-                idx=idx)
+            if priv.enabled:
+                # DP pipeline (DESIGN.md §9): clip + per-client noise on
+                # the flat delta matrix BEFORE the aggregator. Noise keys
+                # fold out of the per-client training keys, so both
+                # drivers (and the sharded engine) derive identical noise
+                # from the same round key. The linear family fuses the
+                # clip into the reduction (agg_clip_reduce under
+                # use_pallas_aggregation — this supersedes fedavgm's
+                # fused momentum step, whose math agg.apply reproduces);
+                # robust strategies rank-trim the privatized matrix.
+                w_eff = agg.weigh(server_state, w, idx)
+                delta_vec = dp.private_delta_flat(
+                    tree_ravel_clients(deltas), w_eff, keys, priv, agg,
+                    use_pallas=fed_cfg.use_pallas_aggregation)
+                delta = tree_unflatten_from_vector(delta_vec,
+                                                   global_params)
+                new_global, server_state = agg.apply(
+                    server_state, global_params, delta, losses=losses,
+                    idx=idx)
+            else:
+                new_global, server_state = agg.step(
+                    server_state, global_params, deltas, w, losses=losses,
+                    idx=idx)
             return new_global, opt_states, server_state, losses
 
         def eval_fn(global_params, key):
@@ -251,6 +288,18 @@ class FederatedGPO:
         mask[:: self.fed_cfg.eval_every] = True
         mask[rounds - 1] = True
         return mask
+
+    def _note_privacy(self, hist: History, n: int) -> None:
+        """Record cumulative ε after each of ``n`` newly-finished rounds
+        (host-side; the accountant composes RDP linearly per round)."""
+        self._rounds_elapsed += n
+        if not self.fed_cfg.privacy.enabled:
+            return
+        for r in range(self._rounds_elapsed - n + 1,
+                       self._rounds_elapsed + 1):
+            hist.round_eps.append(
+                self._accountant.epsilon(r) if self._accountant
+                else float("inf"))
 
     def _append_eval(self, hist: History, r: int, scores: np.ndarray,
                      log_every: int) -> None:
@@ -306,6 +355,7 @@ class FederatedGPO:
                 raise
             base = len(hist.round_loss)
             hist.round_loss.extend(float(x) for x in np.asarray(losses))
+            self._note_privacy(hist, len(mask))
             scores = np.asarray(scores)  # (chunk, K); valid where mask
             for r in np.nonzero(mask)[0]:
                 self._append_eval(hist, base + int(r), scores[r], log_every)
@@ -325,6 +375,7 @@ class FederatedGPO:
          losses) = self._round(self.global_params, self.opt_states,
                                self.server_state, k_round)
         hist.round_loss.append(float(jnp.mean(losses)))
+        self._note_privacy(hist, 1)
         if eval_mask[r]:
             scores = np.asarray(self._eval(self.global_params, k_eval))
             self._append_eval(hist, r, scores, log_every)
@@ -372,6 +423,14 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
     all-gather the flattened delta shard and rank-trim locally (order
     statistics do not decompose into a psum). Multi-pod:
     client_axes=("pod", "data") gives hierarchical aggregation.
+    With ``FedConfig.privacy`` enabled (DESIGN.md §9) each shard clips
+    and noises its own clients' flat deltas LOCALLY — the per-client L2
+    norm lives entirely within the client's shard, so no collective
+    moves before the release point — and the round's single psum then
+    carries the already-noised weighted sum (the robust family gathers
+    the privatized matrix instead). Noise keys fold out of the
+    per-client training ``keys``, so the round is bit-reproducible
+    against the stacked engine given the same keys.
     For ``adaptive``, effective per-group weights are formed OUTSIDE the
     shard_map from the replicated scores (they need a normalization over
     all clients), so the mapped body stays collective-minimal.
@@ -380,6 +439,8 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
     from jax.experimental.shard_map import shard_map
 
     gpo_cfg = fed_cfg.resolve_gpo(gpo_cfg)  # runtime attention override
+    fed_cfg.privacy.validate()
+    priv = fed_cfg.privacy
     opt = opt or adam(fed_cfg.lr)
     if agg is None:
         agg = make_aggregator(fed_cfg.agg, num_clients=fed_cfg.num_clients,
@@ -397,7 +458,27 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
         # delta contract: entry params ARE the replicated global model
         deltas = tree_sub(new_params, client_params)
         global_prev = tree_index(client_params, 0)
-        if agg.linear:
+        if priv.enabled:
+            # DP release point (DESIGN.md §9): clip + noise the local
+            # shard's flat deltas before ANY collective — per-client
+            # norms are shard-local, so the psum/all-gather only ever
+            # carries privatized data.
+            vecs = tree_ravel_clients(deltas)
+            if agg.linear:
+                local_vec = dp.clip_noise_reduce(
+                    vecs, weights, keys, priv,
+                    use_pallas=fed_cfg.use_pallas_aggregation)
+                delta = tree_unflatten_from_vector(
+                    jax.lax.psum(local_vec, axes), global_prev)
+            else:
+                pvecs = dp.privatize_flat(vecs, keys, priv)
+                all_vecs = jax.lax.all_gather(pvecs, axes, axis=0,
+                                              tiled=True)
+                all_w = jax.lax.all_gather(weights, axes, axis=0,
+                                           tiled=True)
+                delta = tree_unflatten_from_vector(
+                    agg.reduce_flat(all_vecs, all_w), global_prev)
+        elif agg.linear:
             if fed_cfg.use_pallas_aggregation:
                 # flatten the local client-delta shard to (C_local, P) in
                 # one vmapped ravel, reduce it with the Pallas delta-

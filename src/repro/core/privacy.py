@@ -1,0 +1,219 @@
+"""Differentially-private client-delta pipeline (DESIGN.md §9).
+
+The pipeline sits on the client→server transport, between local training
+and the ``ServerAggregator``: every client's flattened parameter delta
+d_g is (1) L2-clipped to the sensitivity bound S = ``clip_norm`` and
+(2) perturbed with per-client Gaussian noise of std σ = z·S
+(z = ``noise_multiplier``):
+
+    d̃_g = d_g · min(1, S / ‖d_g‖₂) + σ·ε_g,   ε_g ~ N(0, I)
+
+Because the privatized (C, P) matrix — not any reduction of it — is what
+reaches the aggregator, the pipeline composes with every registry
+strategy: the linear family weighted-sums the d̃_g (fused with the clip
+in the Pallas ``agg_clip_reduce`` kernel under
+``use_pallas_aggregation``), and the robust family rank-trims them.
+Per-client noising is the local/distributed-DP release model, which is
+exactly what makes the guarantee aggregator-agnostic: whatever the
+server computes downstream is post-processing.
+
+**Noise keys.** Each client's noise key is derived by folding a fixed
+tag into the SAME per-client key its local training consumed
+(``client_noise_keys``). Both ``FederatedGPO`` drivers and
+``make_sharded_round`` therefore produce bit-identical noise for the
+same round keys — the scan carry already threads the round RNG, so no
+second RNG chain exists to fall out of sync, and determinism under
+subsampling + noise is pinned by tests/test_privacy.py.
+
+**Accounting.** ``RdpAccountant`` tracks the sampled Gaussian mechanism
+in Rényi DP at integer orders (Mironov et al. 2019): per round the RDP
+at order α is log A(α)/(α−1) with
+
+    A(α) = Σ_{i=0..α} C(α,i) qⁱ (1−q)^{α−i} exp((i²−i)/(2z²))
+
+(q the client sampling rate; q = 1 collapses to the Gaussian-mechanism
+α/(2z²)). RDP composes additively over rounds and converts to (ε, δ)
+via ε = min_α [ α-RDP·rounds + log(1/δ)/(α−1) ]. Fixed-size subsampling
+without replacement (``FedConfig.batch_groups``) is accounted with the
+Poisson-sampling bound at the same rate — the standard moments-
+accountant approximation. Per-round local losses shipped to ``adaptive``
+aggregation are NOT privatized (noted in DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import PrivacyConfig
+from repro.kernels import agg_clip_reduce
+# the kernel's norm floor is the contract constant: a zero delta gets
+# scale min(1, S/1e-12) = 1 (clipping never manufactures a direction).
+# Imported, not redefined, so jnp path and kernel cannot drift; the
+# ref.py oracle spells out the same literal by design (oracles stay
+# import-independent from the optimized paths).
+from repro.kernels.agg_reduce import _NORM_FLOOR
+
+PyTree = Any
+
+# fold_in tag deriving a client's noise key from its local-training key;
+# any fixed constant works — it only has to differ from the fold_in /
+# split indices the training path consumes.
+_NOISE_TAG = 0x5A11CE
+
+
+# ---------------------------------------------------------------------------
+# clip + noise on the flattened (C, P) client-delta matrix
+# ---------------------------------------------------------------------------
+def clip_scales(vecs: jnp.ndarray, clip_norm: float) -> jnp.ndarray:
+    """(C, P) -> (C,) per-client scale min(1, S/‖d_c‖₂)."""
+    x = vecs.astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(jnp.square(x), axis=1))
+    return jnp.minimum(1.0, clip_norm / jnp.maximum(norms, _NORM_FLOOR))
+
+
+def client_noise_keys(keys: jnp.ndarray) -> jnp.ndarray:
+    """Per-client noise keys derived from the per-client training keys."""
+    return jax.vmap(lambda k: jax.random.fold_in(k, _NOISE_TAG))(keys)
+
+
+def client_noise(keys: jnp.ndarray, shape: tuple, sigma: float
+                 ) -> jnp.ndarray:
+    """σ-scaled per-client Gaussian noise matrix (C, P); ``keys`` are the
+    per-client TRAINING keys (the noise keys are folded from them)."""
+    nkeys = client_noise_keys(keys)
+    return sigma * jax.vmap(
+        lambda k: jax.random.normal(k, shape[1:], jnp.float32))(nkeys)
+
+
+def privatize_flat(vecs: jnp.ndarray, keys: jnp.ndarray,
+                   privacy: PrivacyConfig) -> jnp.ndarray:
+    """Clip + noise the flat (C, P) delta matrix — the aggregator-
+    agnostic release; the robust strategies rank-trim this output."""
+    x = vecs.astype(jnp.float32)
+    x = x * clip_scales(x, privacy.clip_norm)[:, None]
+    if privacy.noise_multiplier > 0.0:
+        x = x + client_noise(keys, x.shape, privacy.sigma)
+    return x
+
+
+def clip_noise_reduce(vecs: jnp.ndarray, weights: jnp.ndarray,
+                      keys: jnp.ndarray, privacy: PrivacyConfig, *,
+                      use_pallas: bool = False) -> jnp.ndarray:
+    """clip → noise → weighted sum over the client axis: the linear-
+    strategy hot path. With ``use_pallas`` the per-client norms, the
+    scale-to-clip, the noise add and the weighted accumulate run in ONE
+    fused kernel launch (``agg_clip_reduce``); the jnp path is the same
+    math through ``privatize_flat`` (oracle: kernels/ref.py)."""
+    if use_pallas:
+        noise = (client_noise(keys, vecs.shape, privacy.sigma)
+                 if privacy.noise_multiplier > 0.0 else None)
+        return agg_clip_reduce(vecs, weights.astype(jnp.float32),
+                               clip=privacy.clip_norm, noise=noise)
+    pvecs = privatize_flat(vecs, keys, privacy)
+    return jnp.einsum("c,cp->p", weights.astype(jnp.float32), pvecs)
+
+
+def private_delta_flat(vecs: jnp.ndarray, weights: jnp.ndarray,
+                       keys: jnp.ndarray, privacy: PrivacyConfig, agg, *,
+                       use_pallas: bool = False) -> jnp.ndarray:
+    """The full DP release + client-axis reduction for engines that hold
+    every client locally (the stacked GPO drivers and the backbone/LoRA
+    trainers): linear strategies fuse clip/noise into the weighted sum,
+    robust strategies rank-trim the privatized matrix. The sharded
+    engine interleaves its collectives with these same two pieces
+    (clip_noise_reduce before the psum / privatize_flat before the
+    all-gather) and so cannot call this helper."""
+    if agg.linear:
+        return clip_noise_reduce(vecs, weights, keys, privacy,
+                                 use_pallas=use_pallas)
+    return agg.reduce_flat(privatize_flat(vecs, keys, privacy), weights)
+
+
+# ---------------------------------------------------------------------------
+# Rényi-DP moments accountant (host-side; pure numpy/math)
+# ---------------------------------------------------------------------------
+def _log_binom(n: int, k: int) -> float:
+    return (math.lgamma(n + 1) - math.lgamma(k + 1)
+            - math.lgamma(n - k + 1))
+
+
+def rdp_sampled_gaussian(q: float, noise_multiplier: float,
+                         orders: Sequence[int]) -> np.ndarray:
+    """Per-step RDP of the sampled Gaussian mechanism at integer orders
+    (Mironov et al. 2019, Thm. 5 / the tensorflow-privacy integer-α sum).
+    ``q`` is the sampling rate, ``noise_multiplier`` the ratio z = σ/S.
+    """
+    z = float(noise_multiplier)
+    if z <= 0.0:
+        return np.full(len(orders), np.inf)
+    if not 0.0 < q <= 1.0:
+        raise ValueError(f"sampling rate q={q} must lie in (0, 1]")
+    out = np.empty(len(orders), np.float64)
+    for j, alpha in enumerate(orders):
+        alpha = int(alpha)
+        if alpha < 2:
+            raise ValueError(f"RDP orders must be integers >= 2: {alpha}")
+        if q == 1.0:
+            out[j] = alpha / (2.0 * z * z)
+            continue
+        # log A(alpha) = logsumexp_i [ log C(a,i) + i log q
+        #   + (a-i) log(1-q) + (i^2 - i) / (2 z^2) ]
+        terms = [
+            _log_binom(alpha, i) + i * math.log(q)
+            + (alpha - i) * math.log1p(-q)
+            + (i * i - i) / (2.0 * z * z)
+            for i in range(alpha + 1)
+        ]
+        out[j] = np.logaddexp.reduce(terms) / (alpha - 1)
+    return out
+
+
+def eps_from_rdp(rdp: np.ndarray, orders: Sequence[int],
+                 delta: float) -> float:
+    """Classic RDP→(ε, δ) conversion: min_α [ RDP(α) + log(1/δ)/(α−1) ]."""
+    orders = np.asarray(orders, np.float64)
+    eps = np.asarray(rdp, np.float64) + math.log(1.0 / delta) / (orders - 1)
+    return float(np.min(eps))
+
+
+class RdpAccountant:
+    """Moments accountant for the per-round sampled Gaussian mechanism.
+
+    The per-step RDP vector is constant (fixed q and z), so composition
+    over ``steps`` rounds is a scalar multiply and ``epsilon`` is O(|α|)
+    on the host — cheap enough to record into ``History.round_eps``
+    every round.
+    """
+
+    def __init__(self, noise_multiplier: float, sampling_rate: float,
+                 target_delta: float = 1e-5,
+                 orders: Optional[Sequence[int]] = None):
+        self.orders = tuple(orders or PrivacyConfig().accountant_orders)
+        self.noise_multiplier = float(noise_multiplier)
+        self.sampling_rate = float(sampling_rate)
+        self.target_delta = float(target_delta)
+        self._per_step = rdp_sampled_gaussian(
+            self.sampling_rate, self.noise_multiplier, self.orders)
+
+    def epsilon(self, steps: int) -> float:
+        """(ε at ``target_delta``) after ``steps`` composed rounds."""
+        if steps <= 0:
+            return 0.0
+        if not np.all(np.isfinite(self._per_step)):
+            return float("inf")
+        return eps_from_rdp(steps * self._per_step, self.orders,
+                            self.target_delta)
+
+
+def make_accountant(privacy: PrivacyConfig,
+                    sampling_rate: float) -> Optional[RdpAccountant]:
+    """Accountant for an enabled, noised config; None otherwise (clip-
+    only runs carry no finite ε — callers report inf)."""
+    if not privacy.enabled or privacy.noise_multiplier <= 0.0:
+        return None
+    return RdpAccountant(privacy.noise_multiplier, sampling_rate,
+                         privacy.target_delta, privacy.accountant_orders)

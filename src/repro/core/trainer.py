@@ -23,14 +23,20 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, PrivacyConfig
 from repro.core.aggregation import ServerAggregator
 from repro.core.fedavg import broadcast_to_clients, fedavg_stacked
 from repro.core.lora import apply_lora
 from repro.models import forward
 from repro.models.layers import cross_entropy_loss
 from repro.optim import Optimizer
-from repro.utils.pytree import tree_index, tree_sub, tree_zeros_like
+from repro.utils.pytree import (
+    tree_index,
+    tree_ravel_clients,
+    tree_sub,
+    tree_unflatten_from_vector,
+    tree_zeros_like,
+)
 
 PyTree = Any
 
@@ -134,7 +140,9 @@ def greedy_decode(cfg: ModelConfig, params, cache, first_token, start_pos,
 # Federated backbone training (the paper's technique as a trainer feature)
 # ---------------------------------------------------------------------------
 def _aggregated_round(local_train: Callable,
-                      agg: Optional[ServerAggregator]) -> Callable:
+                      agg: Optional[ServerAggregator],
+                      privacy: Optional[PrivacyConfig] = None,
+                      use_pallas_aggregation: bool = False) -> Callable:
     """Shared round tail for the backbone/LoRA federated trainers.
 
     ``agg=None`` keeps the seed contract: (client_payload, opt_states,
@@ -143,7 +151,19 @@ def _aggregated_round(local_train: Callable,
     DESIGN.md §7 applies — the round takes/returns the server state:
     (payload, opt_states, batches, weights, server_state) ->
     (payload, opt_states, losses, server_state).
+    With an *enabled* ``privacy`` config (DESIGN.md §9; requires
+    ``agg``) the round gains a trailing per-round ``noise_key`` argument
+    and each client's flat delta is clipped + noised before the
+    aggregator, exactly as in the GPO engines
+    (``use_pallas_aggregation`` routes the linear family through the
+    fused ``agg_clip_reduce`` kernel, mirroring the GPO engines' flag).
     """
+    if privacy is not None:
+        privacy.validate()
+    private = privacy is not None and privacy.enabled
+    if private and agg is None:
+        raise ValueError("the DP delta pipeline rides the delta contract:"
+                         " pass a ServerAggregator (agg=) with privacy")
     if agg is None:
         def round_fn(client_payload, opt_states, batches, weights):
             client_payload, opt_states, losses = jax.vmap(local_train)(
@@ -164,26 +184,61 @@ def _aggregated_round(local_train: Callable,
             "objective (federated._make_local_train); the backbone/LoRA "
             "trainers do not apply a proximal term")
 
+    def _finish(new_payload, client_payload, opt_states, losses, weights,
+                server_state, delta_override=None):
+        global_prev = tree_index(client_payload, 0)
+        if delta_override is None:
+            deltas = tree_sub(new_payload, client_payload)
+            global_payload, server_state = agg.step(
+                server_state, global_prev, deltas, weights, losses=losses,
+                idx=None)
+        else:
+            global_payload, server_state = agg.apply(
+                server_state, global_prev, delta_override, losses=losses,
+                idx=None)
+        num_clients = weights.shape[0]
+        return (broadcast_to_clients(global_payload, num_clients),
+                opt_states, losses, server_state)
+
+    if private:
+        from repro.core import privacy as dp
+
+        def round_fn(client_payload, opt_states, batches, weights,
+                     server_state, noise_key):
+            new_payload, opt_states, losses = jax.vmap(local_train)(
+                client_payload, opt_states, batches)
+            # DP pipeline (DESIGN.md §9): clip + per-client noise on the
+            # flat deltas before the aggregator, per-client keys split
+            # off the round's noise_key.
+            deltas = tree_sub(new_payload, client_payload)
+            keys = jax.random.split(noise_key, weights.shape[0])
+            w_eff = agg.weigh(server_state, weights, None)
+            delta_vec = dp.private_delta_flat(
+                tree_ravel_clients(deltas), w_eff, keys, privacy, agg,
+                use_pallas=use_pallas_aggregation)
+            delta = tree_unflatten_from_vector(
+                delta_vec, tree_index(client_payload, 0))
+            return _finish(new_payload, client_payload, opt_states, losses,
+                           weights, server_state, delta_override=delta)
+
+        return round_fn
+
     def round_fn(client_payload, opt_states, batches, weights,
                  server_state):
         new_payload, opt_states, losses = jax.vmap(local_train)(
             client_payload, opt_states, batches)
         # entry payload is the replicated global from the last round
-        deltas = tree_sub(new_payload, client_payload)
-        global_prev = tree_index(client_payload, 0)
-        global_payload, server_state = agg.step(
-            server_state, global_prev, deltas, weights, losses=losses,
-            idx=None)
-        num_clients = weights.shape[0]
-        return (broadcast_to_clients(global_payload, num_clients),
-                opt_states, losses, server_state)
+        return _finish(new_payload, client_payload, opt_states, losses,
+                       weights, server_state)
 
     return round_fn
 
 
 def make_backbone_fedavg_round(cfg: ModelConfig, opt: Optimizer,
                                local_steps: int,
-                               agg: Optional[ServerAggregator] = None
+                               agg: Optional[ServerAggregator] = None,
+                               privacy: Optional[PrivacyConfig] = None,
+                               use_pallas_aggregation: bool = False
                                ) -> Callable:
     """Full-parameter federated round over backbones (feasible <= few-B
     params).
@@ -208,12 +263,15 @@ def make_backbone_fedavg_round(cfg: ModelConfig, opt: Optimizer,
             body, (params, opt_state), batches)
         return params, opt_state, jnp.mean(losses)
 
-    return _aggregated_round(local_train, agg)
+    return _aggregated_round(local_train, agg, privacy,
+                             use_pallas_aggregation)
 
 
 def make_fedlora_round(cfg: ModelConfig, frozen_params, opt: Optimizer,
                        local_steps: int,
-                       agg: Optional[ServerAggregator] = None) -> Callable:
+                       agg: Optional[ServerAggregator] = None,
+                       privacy: Optional[PrivacyConfig] = None,
+                       use_pallas_aggregation: bool = False) -> Callable:
     """Federated LoRA adapters with a frozen (shared) backbone — the
     production recipe for grok-1-class archs (DESIGN.md §3). The adapter
     tree is a plain pytree, so every registry aggregation strategy
@@ -234,4 +292,5 @@ def make_fedlora_round(cfg: ModelConfig, frozen_params, opt: Optimizer,
             body, (lora, opt_state), batches)
         return lora, opt_state, jnp.mean(losses)
 
-    return _aggregated_round(local_train, agg)
+    return _aggregated_round(local_train, agg, privacy,
+                             use_pallas_aggregation)

@@ -4,6 +4,7 @@
 # scan, and the server-aggregation reductions (Eq. 3 FedAvg plus the
 # generalized delta-moment and rank-trim kernels, DESIGN.md §7).
 from repro.kernels.ops import (  # noqa: F401
+    agg_clip_reduce,
     agg_momentum_reduce,
     agg_trimmed_reduce,
     fedavg_reduce,

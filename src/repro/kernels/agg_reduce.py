@@ -22,9 +22,23 @@
    thousands), so no on-chip sort network is needed and VMEM holds only
    the streamed tile plus two (1, bp) accumulators.
 
-Both kernels share the tiling of ``fedavg_reduce``: the grid walks the
+3. ``clip_reduce_flat`` — the DP-aggregation kernel (DESIGN.md §9): one
+   launch computes every client's L2 norm over the full flattened
+   parameter axis, rescales each client's delta to the clip bound
+   min(1, S/‖d_c‖), optionally adds the presampled per-client Gaussian
+   noise tile, and weighted-accumulates into the reduced (1, bp) output.
+   The norm is a global reduction over P, so a single streaming sweep
+   cannot both finish it and consume it; the kernel instead runs a
+   (2, nb) grid — sweep 0 accumulates per-client squared norms into a
+   (C, 1) VMEM scratch, sweep 1 applies scale/noise/reduce — i.e. one
+   kernel launch, two HBM reads of the delta shard (plus one of the
+   noise operand, read only in sweep 1) and one (1, P) write, vs the
+   unfused chain's three delta reads plus a full (C, P)
+   materialization of the clipped matrix.
+
+All kernels share the tiling of ``fedavg_reduce``: the grid walks the
 flattened parameter axis, weights sit in an SMEM-resident (C, 1) tile,
-and each tile streams HBM once.
+and each tile streams HBM once per sweep.
 """
 from __future__ import annotations
 
@@ -33,10 +47,15 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.backend import interpret_default
 
 DEFAULT_BLOCK = 2048
+
+# norm floor shared with core/privacy.py and kernels/ref.py: zero deltas
+# keep scale 1 instead of dividing by zero
+_NORM_FLOOR = 1e-12
 
 
 def _pad_cols(x: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
@@ -91,6 +110,86 @@ def momentum_reduce_flat(stacked: jnp.ndarray, weights: jnp.ndarray,
         interpret=interpret,
     )(w2, stacked, m2)
     return d[0, :p], nm[0, :p]
+
+
+def _clip_reduce_body(clip, x_ref, noise, w_ref, o_ref, sq_ref):
+    """Shared two-sweep body: sweep 0 accumulates squared norms into the
+    (C, 1) scratch, sweep 1 clips/noises/reduces the revisited tile."""
+    ph = pl.program_id(0)
+    i = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)  # (C, bp)
+
+    @pl.when((ph == 0) & (i == 0))
+    def _init():
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    @pl.when(ph == 0)
+    def _accumulate_norms():
+        sq_ref[...] += jnp.sum(x * x, axis=1, keepdims=True)
+
+    @pl.when(ph == 1)
+    def _clip_and_reduce():
+        w = w_ref[...].astype(jnp.float32)  # (C, 1)
+        norm = jnp.sqrt(sq_ref[...])  # (C, 1)
+        scale = jnp.minimum(1.0, clip / jnp.maximum(norm, _NORM_FLOOR))
+        y = x * scale
+        if noise is not None:
+            y = y + noise[...].astype(jnp.float32)
+        o_ref[...] = jnp.sum(w * y, axis=0, keepdims=True).astype(
+            o_ref.dtype)
+
+
+def _clip_reduce_kernel(clip, w_ref, x_ref, o_ref, sq_ref):
+    _clip_reduce_body(clip, x_ref, None, w_ref, o_ref, sq_ref)
+
+
+def _clip_reduce_noise_kernel(clip, w_ref, x_ref, n_ref, o_ref, sq_ref):
+    _clip_reduce_body(clip, x_ref, n_ref, w_ref, o_ref, sq_ref)
+
+
+def clip_reduce_flat(stacked: jnp.ndarray, weights: jnp.ndarray, *,
+                     clip: float, noise: jnp.ndarray | None = None,
+                     block: int = DEFAULT_BLOCK,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """stacked (C, P) deltas, weights (C,), optional presampled σ-scaled
+    noise (C, P) -> (P,):  Σ_c w_c · (d_c · min(1, clip/‖d_c‖₂) + n_c),
+    the DP-FedAvg reduction, in one fused launch (DESIGN.md §9)."""
+    if interpret is None:
+        interpret = interpret_default()
+    if clip <= 0.0:
+        raise ValueError(f"clip={clip} must be > 0 (clip_norm == 0 means "
+                         "the privacy pipeline is disabled — callers must "
+                         "not reach the kernel)")
+    c, p = stacked.shape
+    stacked, pp = _pad_cols(stacked, block)
+    nb = pp // block
+    w2 = weights.reshape(c, 1).astype(jnp.float32)
+
+    in_specs = [
+        pl.BlockSpec((c, 1), lambda ph, i: (0, 0)),
+        pl.BlockSpec((c, block), lambda ph, i: (0, i)),
+    ]
+    operands = [w2, stacked]
+    if noise is not None:
+        noise, _ = _pad_cols(noise, block)
+        # ph * i pins the noise to block 0 during the norm sweep (where
+        # the kernel never reads it) so it streams HBM once, in sweep 1
+        in_specs.append(pl.BlockSpec((c, block), lambda ph, i: (0, ph * i)))
+        operands.append(noise)
+        kernel = functools.partial(_clip_reduce_noise_kernel, clip)
+    else:
+        kernel = functools.partial(_clip_reduce_kernel, clip)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(2, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, block), lambda ph, i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, pp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((c, 1), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+    return out[0, :p]
 
 
 def _trim_kernel(k, w_ref, x_ref, o_ref):

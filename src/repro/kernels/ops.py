@@ -11,7 +11,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.agg_reduce import momentum_reduce_flat, trimmed_reduce_flat
+from repro.kernels.agg_reduce import (
+    clip_reduce_flat,
+    momentum_reduce_flat,
+    trimmed_reduce_flat,
+)
 from repro.kernels.backend import interpret_default as _interpret_default
 from repro.kernels.fedavg_reduce import fedavg_reduce_flat
 from repro.kernels.flash_attention import flash_attention_bhsd
@@ -129,6 +133,20 @@ def agg_momentum_reduce(stacked, weights, moment, *, beta: float,
         interpret = _interpret_default()
     return momentum_reduce_flat(stacked, weights, moment, beta=beta,
                                 block=block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("clip", "block", "interpret"))
+def agg_clip_reduce(stacked, weights, *, clip: float, noise=None,
+                    block: int = 2048, interpret: bool | None = None):
+    """stacked (C, P) client deltas, weights (C,), optional presampled
+    σ-scaled per-client noise (C, P) -> (P,): the fused DP-aggregation
+    kernel (DESIGN.md §9) — per-client L2 norm, scale-to-clip, noise add
+    and weighted accumulate in one launch. ``noise=None`` is the
+    clip-only path (a distinct trace; no dummy zero matrix streams)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return clip_reduce_flat(stacked, weights, clip=clip, noise=noise,
+                            block=block, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("trim", "block", "interpret"))

@@ -112,6 +112,20 @@ def ref_momentum_reduce_flat(stacked, weights, moment, *, beta):
     return d.astype(stacked.dtype), nm
 
 
+def ref_clip_reduce(stacked, weights, *, clip, noise=None):
+    """DP-FedAvg reduction written out explicitly: per-client L2 norm,
+    scale to the clip bound, optional presampled noise add, weighted sum
+    — the oracle for the fused ``agg_clip_reduce`` kernel (DESIGN.md §9).
+    The 1e-12 norm floor matches the kernel: zero deltas keep scale 1."""
+    x = stacked.astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(jnp.square(x), axis=1))
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12))
+    y = x * scale[:, None]
+    if noise is not None:
+        y = y + noise.astype(jnp.float32)
+    return jnp.einsum("c,cp->p", weights.astype(jnp.float32), y)
+
+
 def ref_trimmed_flat(stacked, weights, *, trim):
     """Rank-trimmed weighted mean via an explicit stable argsort: sort
     each coordinate's clients (ties by client index), drop ``trim`` at

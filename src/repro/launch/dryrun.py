@@ -171,6 +171,8 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
 def lower_gpo_round(agg_name: str, *, clients: int = 8,
                     use_pallas: bool = False,
                     use_pallas_attention: bool = False,
+                    clip_norm: float = 0.0,
+                    noise_multiplier: float = 0.0,
                     verbose: bool = True) -> dict:
     """Compile the shard_map federated GPO round for one aggregation
     strategy on a ``clients``-device 'data' mesh and report its
@@ -179,9 +181,14 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
     strategies an all-gather of the flat client-delta matrix instead.
     ``use_pallas_attention`` routes every local epoch's fwd+bwd through
     the banded custom-VJP attention kernels (DESIGN.md §8) so the
-    compiled schedule reflects the fused training hot path."""
+    compiled schedule reflects the fused training hot path.
+    ``clip_norm`` > 0 compiles the DP client-delta pipeline
+    (DESIGN.md §9): clip + noise happen shard-locally BEFORE the
+    collectives, so the schedule must keep the exact same shape — one
+    psum of the (already privatized) weighted delta for the linear
+    family, an all-gather of the privatized matrix for the robust one."""
     from jax.sharding import NamedSharding
-    from repro.configs import AggConfig, FedConfig, GPOConfig
+    from repro.configs import AggConfig, FedConfig, GPOConfig, PrivacyConfig
     from repro.core import make_aggregator
     from repro.core.federated import make_sharded_round
     from repro.core.gpo import init_gpo_params
@@ -195,10 +202,13 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
                                          seed=0))
     gcfg = GPOConfig(d_embed=16, d_model=32, num_layers=1, num_heads=2,
                      d_ff=32)
+    privacy = PrivacyConfig(clip_norm=clip_norm,
+                            noise_multiplier=noise_multiplier)
     fcfg = FedConfig(num_clients=clients, local_epochs=2, num_context=6,
                      num_target=6, agg=AggConfig(name=agg_name),
                      use_pallas_aggregation=use_pallas,
-                     use_pallas_attention=use_pallas_attention)
+                     use_pallas_attention=use_pallas_attention,
+                     privacy=privacy)
     opt = adam(fcfg.lr)
     agg = make_aggregator(fcfg.agg, num_clients=clients,
                           use_pallas=use_pallas)
@@ -229,6 +239,9 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
         "clients": clients,
         "use_pallas_aggregation": use_pallas,
         "use_pallas_attention": use_pallas_attention,
+        "private": privacy.enabled,
+        "clip_norm": clip_norm,
+        "noise_multiplier": noise_multiplier,
         "linear": agg.linear,
         "compile_s": round(time.time() - t0, 1),
         "collective_bytes_by_kind": dict(coll.bytes_by_kind),
@@ -257,16 +270,29 @@ def main() -> None:
     ap.add_argument("--pallas-attn", action="store_true",
                     help="route --gpo-fed local training through the "
                          "banded custom-VJP attention kernels")
+    ap.add_argument("--private", action="store_true",
+                    help="compile the --gpo-fed round with the DP "
+                         "client-delta pipeline (shard-local clip+noise "
+                         "before the round's collectives, DESIGN.md §9)")
+    ap.add_argument("--clip-norm", type=float, default=1.0,
+                    help="per-client L2 clip for --private")
+    ap.add_argument("--noise-multiplier", type=float, default=1.0,
+                    help="Gaussian noise multiplier for --private")
     ap.add_argument("--out", default=None, help="append result as json line")
     args = ap.parse_args()
     if not args.gpo_fed and not (args.arch and args.shape):
         ap.error("--arch and --shape are required unless --gpo-fed")
-    what = (f"gpo-fed x {args.agg} clients={args.clients}" if args.gpo_fed
+    what = (f"gpo-fed x {args.agg} clients={args.clients}"
+            + (" private" if args.private else "") if args.gpo_fed
             else f"{args.arch} x {args.shape} multi_pod={args.multi_pod}")
     try:
         if args.gpo_fed:
-            result = lower_gpo_round(args.agg, clients=args.clients,
-                                     use_pallas_attention=args.pallas_attn)
+            result = lower_gpo_round(
+                args.agg, clients=args.clients,
+                use_pallas_attention=args.pallas_attn,
+                clip_norm=args.clip_norm if args.private else 0.0,
+                noise_multiplier=(args.noise_multiplier if args.private
+                                  else 0.0))
         else:
             result = lower_pair(args.arch, args.shape,
                                 multi_pod=args.multi_pod)

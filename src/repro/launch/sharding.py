@@ -128,7 +128,12 @@ def server_state_shardings(state: PyTree, mesh) -> PyTree:
     """Server-aggregator ``AggState`` is replicated on every shard
     (DESIGN.md §7): the post-psum server update is deterministic, so each
     client shard carries the momentum/moment trees and adaptive scores
-    whole rather than paying a gather before every round."""
+    whole rather than paying a gather before every round. This covers
+    the DP pipeline (DESIGN.md §9) too: clip/noise state is either
+    shard-local (per-client noise keys fold out of the sharded ``keys``
+    argument) or host-side (the Rényi accountant), so a private round
+    adds NO device-resident server state — any pytree handed here (e.g.
+    a future accountant-on-device extension) replicates the same way."""
     repl = NamedSharding(mesh, P())
     return jax.tree.map(lambda _: repl, state)
 

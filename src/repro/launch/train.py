@@ -14,13 +14,18 @@ Three trainer modes, all runnable on CPU with --smoke (reduced configs):
 
 All federated trainers take ``--agg`` (plus the matching hyperparameter
 flags) to select the server-aggregation strategy from the registry in
-``repro.core.aggregation`` (DESIGN.md §7).
+``repro.core.aggregation`` (DESIGN.md §7), and ``--clip-norm`` /
+``--noise-multiplier`` / ``--dp-delta`` to run the differentially-
+private client-delta pipeline (DESIGN.md §9; per-round ε is reported
+from the Rényi accountant).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
       --trainer fedavg --rounds 3 --local-steps 2 --agg fedavgm
   PYTHONPATH=src python -m repro.launch.train --trainer gpo --rounds 50 \
       --agg adaptive
+  PYTHONPATH=src python -m repro.launch.train --trainer gpo --rounds 50 \
+      --clip-norm 0.5 --noise-multiplier 0.8
 """
 from __future__ import annotations
 
@@ -37,9 +42,11 @@ from repro.configs import (
     FedConfig,
     GPOConfig,
     INPUT_SHAPES,
+    PrivacyConfig,
     get_arch,
     smoke_variant,
 )
+from repro.core.privacy import make_accountant
 from repro.core import (
     AGGREGATORS,
     FederatedGPO,
@@ -92,23 +99,40 @@ def main() -> None:
                     help="trimmed_mean per-side trim fraction")
     ap.add_argument("--fair-temp", type=float, default=1.0,
                     help="adaptive fairness-weight temperature")
+    # DP client-delta pipeline (DESIGN.md §9); applies to every
+    # federated trainer. --clip-norm 0 (default) disables it.
+    ap.add_argument("--clip-norm", type=float, default=0.0,
+                    help="per-client L2 clip on the flat delta (0 = off)")
+    ap.add_argument("--noise-multiplier", type=float, default=0.0,
+                    help="Gaussian noise std = z * clip-norm per client")
+    ap.add_argument("--dp-delta", type=float, default=1e-5,
+                    help="target delta for the Renyi accountant's eps")
     args = ap.parse_args()
 
     agg_cfg = AggConfig(name=args.agg, server_lr=args.server_lr,
                         momentum=args.server_momentum,
                         prox_mu=args.prox_mu, trim_frac=args.trim_frac,
                         fair_temp=args.fair_temp)
+    priv_cfg = PrivacyConfig(clip_norm=args.clip_norm,
+                             noise_multiplier=args.noise_multiplier,
+                             target_delta=args.dp_delta)
+    priv_cfg.validate()
 
     if args.trainer == "gpo":
         data = make_survey_data(SurveyConfig(seed=args.seed))
         tr, ev = split_groups(data, seed=args.seed)
         gcfg = GPOConfig(d_embed=data.phi.shape[-1])
         fcfg = FedConfig(num_clients=len(tr), rounds=args.rounds,
-                         seed=args.seed, agg=agg_cfg)
+                         seed=args.seed, agg=agg_cfg, privacy=priv_cfg)
         fed = FederatedGPO(gcfg, fcfg, data, tr, ev)
         hist = fed.run(rounds=args.rounds, log_every=10)
         print(f"final loss={hist.round_loss[-1]:.4f} "
               f"AS={hist.eval_mean_as[-1]:.4f} FI={hist.eval_fi[-1]:.4f}")
+        if hist.round_eps:
+            print(f"privacy: eps={hist.round_eps[-1]:.3f} at "
+                  f"delta={priv_cfg.target_delta:g} after {args.rounds} "
+                  f"rounds (clip={priv_cfg.clip_norm}, "
+                  f"z={priv_cfg.noise_multiplier})")
         if args.ckpt_dir:
             save_checkpoint(args.ckpt_dir, args.rounds, fed.global_params)
         return
@@ -142,21 +166,32 @@ def main() -> None:
             opt_states = jax.vmap(opt.init)(client_params)
             rnd = jax.jit(make_backbone_fedavg_round(cfg, opt,
                                                      args.local_steps,
-                                                     agg=agg))
+                                                     agg=agg,
+                                                     privacy=priv_cfg))
             server_state = agg.init(params)
         else:
             lora = init_lora(params, key, rank=8)
             client_params = broadcast_to_clients(lora, c)
             opt_states = jax.vmap(opt.init)(client_params)
             rnd = jax.jit(make_fedlora_round(cfg, params, opt,
-                                             args.local_steps, agg=agg))
+                                             args.local_steps, agg=agg,
+                                             privacy=priv_cfg))
             server_state = agg.init(lora)
+        # full participation => sampling rate 1 for the accountant
+        accountant = make_accountant(priv_cfg, 1.0)
+        noise_base = jax.random.PRNGKey(args.seed + 17)
         for r in range(args.rounds):
             batches = _stack_client_batches(it, c, args.local_steps)
+            round_args = (client_params, opt_states, batches, weights,
+                          server_state)
+            if priv_cfg.enabled:
+                round_args += (jax.random.fold_in(noise_base, r),)
             client_params, opt_states, losses, server_state = rnd(
-                client_params, opt_states, batches, weights, server_state)
+                *round_args)
+            eps = (f" eps={accountant.epsilon(r + 1):.3f}"
+                   if accountant else "")
             print(f"round {r:3d} client losses="
-                  f"{np.round(np.asarray(losses), 4)}")
+                  f"{np.round(np.asarray(losses), 4)}{eps}")
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, args.steps,
                         params if args.trainer == "standard"

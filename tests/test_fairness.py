@@ -1,4 +1,7 @@
-"""Alignment / fairness metric unit tests (paper Eqs. 4-6)."""
+"""Alignment / fairness metric unit tests (paper Eqs. 4-6), including
+the degenerate inputs the metrics must stay finite on: zero-mass
+"distributions", identical distributions, single-group score vectors,
+all-zero scores, and non-monotone / constant / empty loss curves."""
 import jax.numpy as jnp
 import numpy as np
 
@@ -8,6 +11,7 @@ from repro.core.fairness import (
     convergence_round,
     fairness_index,
     js_distance,
+    kl_divergence,
 )
 
 
@@ -50,6 +54,55 @@ def test_cov_and_fi_known_values():
                                1.0 / (1.0 + cov ** 2), rtol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# edge cases: the metrics must be total functions on degenerate inputs
+# ---------------------------------------------------------------------------
+def test_zero_mass_distributions_are_finite():
+    """All-zero 'distributions' hit the eps clipping, not log(0)/0-div:
+    every metric stays finite, and two zero vectors look identical."""
+    z = jnp.zeros((1, 4))
+    assert np.isfinite(float(kl_divergence(z, z)[0]))
+    assert float(js_distance(z, z)[0]) < 1e-6  # identical -> distance 0
+    assert np.isfinite(float(alignment_score(z, z)))
+    p = jnp.array([[0.25, 0.25, 0.25, 0.25]])
+    d = float(js_distance(p, z)[0])
+    assert np.isfinite(d) and 0.0 <= d <= 1.0 + 1e-6
+
+
+def test_partial_zero_mass_options_are_finite():
+    """Distributions with zero-probability options (the common case for
+    survey answers nobody picked) must not produce NaN/inf."""
+    p = jnp.array([[0.5, 0.5, 0.0, 0.0]])
+    q = jnp.array([[0.0, 0.0, 0.5, 0.5]])
+    d = float(js_distance(p, q)[0])
+    assert np.isfinite(d)
+    assert abs(d - 1.0) < 1e-3  # disjoint support -> max distance
+    assert np.isfinite(float(alignment_score(p, q)))
+
+
+def test_identical_distributions_alignment_is_exactly_top():
+    key_probs = jnp.array([[0.1, 0.2, 0.3, 0.4], [0.7, 0.1, 0.1, 0.1]])
+    assert abs(float(alignment_score(key_probs, key_probs)) - 1.0) < 1e-6
+    assert float(js_distance(key_probs, key_probs).max()) < 1e-6
+
+
+def test_single_group_fairness_index_is_one():
+    """K=1 eval groups: sigma is 0 by definition, so CoV=0 and FI=1 —
+    no 0/0 from the single-element mean."""
+    one = jnp.array([0.73])
+    assert float(coefficient_of_variation(one)) == 0.0
+    assert float(fairness_index(one)) == 1.0
+
+
+def test_zero_scores_cov_hits_eps_floor_not_division_by_zero():
+    """All-zero alignment scores: mu=0 triggers the eps guard; CoV and
+    FI must come back finite (FI=1: zero spread, however degenerate)."""
+    zero = jnp.zeros((5,))
+    assert np.isfinite(float(coefficient_of_variation(zero)))
+    assert np.isfinite(float(fairness_index(zero)))
+    assert float(fairness_index(zero)) == 1.0
+
+
 def test_convergence_round_95pct():
     # descent from 1.0 to 0.0: 95% of descent reached at value 0.05
     losses = np.linspace(1.0, 0.0, 101)
@@ -59,3 +112,28 @@ def test_convergence_round_95pct():
     # first value <= 0.088 is index 3 (0.06)
     losses2 = np.array([1.0, 0.5, 0.2, 0.06, 0.04, 0.05, 0.04])
     assert convergence_round(losses2) == 3
+
+
+def test_convergence_round_degenerate_curves():
+    # empty history: 0, not an index error
+    assert convergence_round(np.array([])) == 0
+    # single point: already "converged" at round 0
+    assert convergence_round(np.array([1.0])) == 0
+    # constant loss: zero descent, threshold == start, hit at round 0
+    assert convergence_round(np.full(10, 0.5)) == 0
+    # loss that INCREASES: final > start, threshold sits above start so
+    # round 0 satisfies it (the 95%-of-descent contract degenerates
+    # gracefully instead of returning an out-of-range index)
+    r = convergence_round(np.linspace(0.1, 1.0, 20))
+    assert 0 <= r < 20
+
+
+def test_convergence_round_non_monotone_never_reaches_threshold():
+    """A curve that dips then ends HIGHER than its minimum: if no prefix
+    point crosses the threshold the last index is returned."""
+    losses = np.array([1.0, 0.9, 0.95, 0.95, 0.96])
+    r = convergence_round(losses, frac=0.95)
+    assert r in (len(losses) - 1, int(np.argmin(losses)))
+    # spiky curve: first crossing wins even if later values bounce back
+    spiky = np.array([1.0, 0.04, 0.9, 0.05, 0.0])
+    assert convergence_round(spiky) == 1

@@ -1,0 +1,485 @@
+"""The differentially-private client-delta pipeline (DESIGN.md §9).
+
+Five contracts:
+
+1. degeneracy — ``PrivacyConfig(clip_norm=0)`` disables the pipeline and
+   every engine (scan / loop / sharded) traces the exact pre-privacy
+   computation: histories and parameters are BIT-equal to a default run;
+2. clipping semantics — privatized per-client norms never exceed the
+   bound, non-binding clips are exact no-ops, and engine results with a
+   generous clip match the unclipped baseline;
+3. kernel oracle — the fused ``agg_clip_reduce`` kernel matches the
+   explicit ``ref.py`` formula across ragged client counts, non-uniform
+   weights, noise on/off and interpret modes, and the engine-level
+   Pallas path matches the jnp path for every registry strategy;
+4. determinism — same ``FedConfig.seed`` under subsampling AND DP noise
+   reproduces histories exactly, in both drivers, and the sharded
+   engine derives bit-identical noise from the same per-client keys;
+5. accounting — the Rényi accountant's closed forms, monotonicity, and
+   the ε stream recorded into ``History.round_eps``.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import AggConfig, FedConfig, GPOConfig, PrivacyConfig
+from repro.core import (
+    FederatedGPO,
+    RdpAccountant,
+    broadcast_to_clients,
+    clip_noise_reduce,
+    clip_scales,
+    make_accountant,
+    make_aggregator,
+    normalize_weights,
+    privatize_flat,
+)
+from repro.core.federated import _make_local_train, make_sharded_round
+from repro.core.gpo import init_gpo_params
+from repro.core import privacy as dp
+from repro.data import SurveyConfig, make_survey_data, split_groups
+from repro.kernels import agg_clip_reduce
+from repro.kernels.ref import ref_clip_reduce, ref_fedavg_flat
+from repro.optim import adam
+from repro.utils.pytree import (
+    tree_ravel_clients,
+    tree_sub,
+    tree_unflatten_from_vector,
+)
+
+GCFG = GPOConfig(d_embed=8, d_model=16, num_layers=1, num_heads=2, d_ff=32)
+
+
+def _make_fed(privacy=PrivacyConfig(), agg=AggConfig(), use_pallas=False,
+              batch_groups=0, seed=3):
+    data = make_survey_data(SurveyConfig(
+        num_groups=6, num_questions=24, d_embed=8, seed=seed))
+    tr, ev = split_groups(data, seed=seed)
+    fcfg = FedConfig(num_clients=len(tr), rounds=3, local_epochs=2,
+                     eval_every=2, num_context=4, num_target=4,
+                     batch_groups=batch_groups, agg=agg,
+                     use_pallas_aggregation=use_pallas, privacy=privacy,
+                     seed=seed)
+    return FederatedGPO(GCFG, fcfg, data, tr, ev)
+
+
+def _assert_bit_equal(fed_a, fed_b, hist_a, hist_b):
+    assert hist_a.round_loss == hist_b.round_loss  # floats, bit-for-bit
+    np.testing.assert_array_equal(np.stack(hist_a.eval_scores),
+                                  np.stack(hist_b.eval_scores))
+    for a, b in zip(jax.tree.leaves(fed_a.global_params),
+                    jax.tree.leaves(fed_b.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# 1. degeneracy: clip_norm == 0 is the exact pre-privacy trace
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ["scan", "loop"])
+def test_disabled_privacy_is_bit_equal_to_fedavg(engine):
+    """PrivacyConfig(0, 0) must not perturb a single bit of the FedAvg
+    run — the pipeline is statically traced out, not multiplied by 1."""
+    fed_ref = _make_fed()
+    hist_ref = fed_ref.run(rounds=3, engine=engine)
+    fed = _make_fed(PrivacyConfig(clip_norm=0.0, noise_multiplier=0.0))
+    hist = fed.run(rounds=3, engine=engine)
+    _assert_bit_equal(fed_ref, fed, hist_ref, hist)
+    assert hist.round_eps == []  # no accounting without a pipeline
+
+
+def test_disabled_privacy_is_bit_equal_in_sharded_round():
+    C = 4
+    data = make_survey_data(SurveyConfig(
+        num_groups=C, num_questions=24, d_embed=8, seed=0))
+    opt = adam(1e-3)
+    params = init_gpo_params(GCFG, jax.random.PRNGKey(0))
+    groups = jnp.arange(C, dtype=jnp.int32)
+    weights = normalize_weights(data.sizes[groups])
+    keys = jax.random.split(jax.random.PRNGKey(1), C)
+    cp = broadcast_to_clients(params, C)
+    opt_states = jax.vmap(opt.init)(cp)
+    mesh = jax.make_mesh((1,), ("data",))
+    outs = []
+    for priv in (PrivacyConfig(),
+                 PrivacyConfig(clip_norm=0.0, noise_multiplier=0.0)):
+        fcfg = FedConfig(num_clients=C, local_epochs=2, lr=1e-3,
+                         num_context=4, num_target=4, privacy=priv)
+        agg = make_aggregator(fcfg.agg, num_clients=C)
+        round_fn = make_sharded_round(GCFG, fcfg, data, mesh, opt=opt,
+                                      agg=agg)
+        cp_out, _, losses, _ = jax.jit(round_fn)(
+            cp, opt_states, keys, groups, weights, agg.init(params))
+        outs.append((cp_out, losses))
+    np.testing.assert_array_equal(np.asarray(outs[0][1]),
+                                  np.asarray(outs[1][1]))
+    for a, b in zip(jax.tree.leaves(outs[0][0]),
+                    jax.tree.leaves(outs[1][0])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_noise_without_clip_is_rejected():
+    with pytest.raises(ValueError, match="clip_norm"):
+        PrivacyConfig(clip_norm=0.0, noise_multiplier=1.0).validate()
+    with pytest.raises(ValueError):
+        PrivacyConfig(clip_norm=-1.0).validate()
+    with pytest.raises(ValueError, match="target_delta"):
+        PrivacyConfig(clip_norm=1.0, target_delta=0.0).validate()
+
+
+# ---------------------------------------------------------------------------
+# 2. clipping semantics
+# ---------------------------------------------------------------------------
+def test_privatized_norms_never_exceed_bound():
+    key = jax.random.PRNGKey(0)
+    vecs = jax.random.normal(key, (8, 257)) * 10.0
+    priv = PrivacyConfig(clip_norm=0.7)
+    keys = jax.random.split(jax.random.fold_in(key, 1), 8)
+    out = privatize_flat(vecs, keys, priv)  # clip-only
+    norms = np.linalg.norm(np.asarray(out), axis=1)
+    assert np.all(norms <= 0.7 * (1 + 1e-5))
+
+
+def test_clip_is_identity_below_bound_and_handles_zero():
+    key = jax.random.PRNGKey(1)
+    vecs = jax.random.normal(key, (4, 64))
+    vecs = vecs / jnp.linalg.norm(vecs, axis=1, keepdims=True)  # norm 1
+    vecs = vecs.at[2].set(0.0)  # zero delta: scale must stay 1, not 0/0
+    scales = clip_scales(vecs, 2.0)
+    np.testing.assert_array_equal(np.asarray(scales), np.ones(4))
+    priv = PrivacyConfig(clip_norm=2.0)
+    keys = jax.random.split(key, 4)
+    np.testing.assert_array_equal(np.asarray(privatize_flat(
+        vecs, keys, priv)), np.asarray(vecs, np.float32))
+
+
+def test_generous_clip_matches_unclipped_engine():
+    """A clip bound no client ever hits makes scale exactly 1.0, so the
+    engine must reproduce the unclipped run (up to the reduce's float
+    reassociation — the privacy path reduces the raveled matrix)."""
+    hist_ref = _make_fed().run(rounds=3)
+    fed = _make_fed(PrivacyConfig(clip_norm=1e6))
+    hist = fed.run(rounds=3)
+    np.testing.assert_allclose(hist_ref.round_loss, hist.round_loss,
+                               rtol=1e-4, atol=1e-6)
+    assert hist.round_eps == [float("inf")] * 3  # clip-only: no DP claim
+
+
+def test_tight_clip_changes_the_run_and_noise_changes_it_further():
+    hist_ref = _make_fed().run(rounds=3)
+    hist_clip = _make_fed(PrivacyConfig(clip_norm=1e-3)).run(rounds=3)
+    assert not np.allclose(hist_ref.round_loss, hist_clip.round_loss)
+    hist_noise = _make_fed(PrivacyConfig(
+        clip_norm=1e-3, noise_multiplier=1.0)).run(rounds=3)
+    assert hist_noise.round_loss != hist_clip.round_loss
+
+
+# ---------------------------------------------------------------------------
+# 3. kernel == oracle == engine jnp path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("c,p", [(2, 100), (5, 10001), (9, 4096),
+                                 (16, 2048)])
+@pytest.mark.parametrize("with_noise", [False, True])
+def test_clip_reduce_kernel_matches_ref(c, p, with_noise):
+    """Fused kernel vs the explicit formula across ragged client counts,
+    non-uniform weights and noise on/off (test_aggregation sweep style).
+    Mixed clipped/unclipped clients: half the rows sit below the bound."""
+    key = jax.random.PRNGKey(5)
+    stacked = jax.random.normal(key, (c, p))
+    stacked = stacked.at[::2].mul(10.0)  # alternate binding / non-binding
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (c,)))
+    noise = (0.3 * jax.random.normal(jax.random.fold_in(key, 2), (c, p))
+             if with_noise else None)
+    clip = float(jnp.median(jnp.linalg.norm(stacked, axis=1)))
+    out = agg_clip_reduce(stacked, w, clip=clip, noise=noise)
+    ref = ref_clip_reduce(stacked, w, clip=clip, noise=noise)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("interpret", [True, None])
+def test_clip_reduce_interpret_modes(interpret):
+    """Explicit interpret=True and the backend default agree (on CPU the
+    default IS interpret; on TPU this pins native == interpret)."""
+    key = jax.random.PRNGKey(6)
+    stacked = jax.random.normal(key, (5, 300)) * 4.0
+    w = jnp.full((5,), 0.2)
+    out = agg_clip_reduce(stacked, w, clip=1.0, interpret=interpret)
+    ref = ref_clip_reduce(stacked, w, clip=1.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_clip_reduce_kernel_rejects_disabled_clip():
+    stacked = jnp.ones((3, 8))
+    w = jnp.full((3,), 1.0 / 3)
+    with pytest.raises(ValueError, match="clip"):
+        agg_clip_reduce(stacked, w, clip=0.0)
+
+
+def test_clip_noise_reduce_pallas_equals_jnp_path():
+    """Both clip_noise_reduce branches (fused kernel / privatize+einsum)
+    must produce the same privatized reduction, noise included."""
+    key = jax.random.PRNGKey(7)
+    vecs = jax.random.normal(key, (6, 513)) * 3.0
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (6,)))
+    keys = jax.random.split(jax.random.fold_in(key, 2), 6)
+    priv = PrivacyConfig(clip_norm=0.8, noise_multiplier=0.5)
+    out_pal = clip_noise_reduce(vecs, w, keys, priv, use_pallas=True)
+    out_jnp = clip_noise_reduce(vecs, w, keys, priv, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out_pal), np.asarray(out_jnp),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["fedavg", "fedavgm", "fedadam",
+                                  "trimmed_mean", "median", "adaptive"])
+def test_private_pallas_engine_matches_jnp_per_strategy(name):
+    """use_pallas_aggregation under DP routes the linear family through
+    agg_clip_reduce and the robust family through privatize + the trim
+    kernel; metrics must match the jnp reference for every strategy."""
+    priv = PrivacyConfig(clip_norm=0.3, noise_multiplier=0.7)
+    cfg = AggConfig(name=name)
+    fed_jnp = _make_fed(priv, agg=cfg)
+    hist_jnp = fed_jnp.run(rounds=3)
+    fed_pal = _make_fed(priv, agg=cfg, use_pallas=True)
+    hist_pal = fed_pal.run(rounds=3)
+    np.testing.assert_allclose(hist_jnp.round_loss, hist_pal.round_loss,
+                               rtol=1e-4, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(fed_jnp.global_params),
+                    jax.tree.leaves(fed_pal.global_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(fed_jnp.server_state),
+                    jax.tree.leaves(fed_pal.server_state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# 4. determinism + engine equivalence under DP
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("engine", ["scan", "loop"])
+def test_same_seed_reproduces_run_under_subsampling_and_noise(engine):
+    """Two trainers built from the same FedConfig.seed, with client
+    subsampling AND DP noise, must produce identical histories: the
+    noise keys fold out of the per-client training keys, which the round
+    key chain derives deterministically."""
+    priv = PrivacyConfig(clip_norm=0.5, noise_multiplier=1.0)
+    hist_a = _make_fed(priv, batch_groups=2).run(rounds=3, engine=engine)
+    hist_b = _make_fed(priv, batch_groups=2).run(rounds=3, engine=engine)
+    assert hist_a.round_loss == hist_b.round_loss
+    np.testing.assert_array_equal(np.stack(hist_a.eval_scores),
+                                  np.stack(hist_b.eval_scores))
+    assert hist_a.round_eps == hist_b.round_eps
+
+
+def test_scan_matches_loop_under_noise():
+    """Both drivers derive per-round keys identically, so the SAME noise
+    realizations are drawn and the histories agree to float tolerance."""
+    priv = PrivacyConfig(clip_norm=0.5, noise_multiplier=1.0)
+    fed_scan = _make_fed(priv)
+    hist_scan = fed_scan.run(rounds=3, engine="scan")
+    fed_loop = _make_fed(priv)
+    hist_loop = fed_loop.run(rounds=3, engine="loop")
+    np.testing.assert_allclose(hist_scan.round_loss, hist_loop.round_loss,
+                               rtol=1e-3, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(fed_scan.global_params),
+                    jax.tree.leaves(fed_loop.global_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["fedavg", "median"])
+def test_sharded_private_round_matches_stacked(name):
+    """make_sharded_round under DP == the stacked reference with the
+    same per-client keys: clip + noise happen before the collective and
+    the noise realizations are identical by construction."""
+    C = 5
+    data = make_survey_data(SurveyConfig(
+        num_groups=C, num_questions=24, d_embed=8, seed=0))
+    priv = PrivacyConfig(clip_norm=0.3, noise_multiplier=0.8)
+    fcfg = FedConfig(num_clients=C, local_epochs=2, lr=1e-3,
+                     num_context=4, num_target=4,
+                     agg=AggConfig(name=name), privacy=priv)
+    opt = adam(fcfg.lr)
+    agg = make_aggregator(fcfg.agg, num_clients=C)
+    params = init_gpo_params(GCFG, jax.random.PRNGKey(0))
+    server_state = agg.init(params)
+    groups = jnp.arange(C, dtype=jnp.int32)
+    weights = normalize_weights(data.sizes[groups])
+    keys = jax.random.split(jax.random.PRNGKey(1), C)
+    cp = broadcast_to_clients(params, C)
+    opt_states = jax.vmap(opt.init)(cp)
+
+    local_train = _make_local_train(GCFG, fcfg, data, opt)
+    cp_ref, _, losses = jax.jit(jax.vmap(local_train))(
+        cp, opt_states, keys, groups)
+    vecs = tree_ravel_clients(tree_sub(cp_ref, cp))
+    if agg.linear:
+        delta_vec = clip_noise_reduce(vecs, weights, keys, priv)
+    else:
+        delta_vec = agg.reduce_flat(privatize_flat(vecs, keys, priv),
+                                    weights)
+    delta = tree_unflatten_from_vector(delta_vec, params)
+    global_ref, _ = agg.apply(server_state, params, delta, losses=losses,
+                              idx=None)
+
+    mesh = jax.make_mesh((1,), ("data",))
+    round_fn = make_sharded_round(GCFG, fcfg, data, mesh, opt=opt, agg=agg)
+    cp_s, _, _, _ = jax.jit(round_fn)(cp, opt_states, keys, groups,
+                                      weights, server_state)
+    for a, b in zip(jax.tree.leaves(global_ref), jax.tree.leaves(cp_s)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b)[0],
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_noise_keys_are_distinct_from_training_keys():
+    """The fold_in tag must yield noise independent of the local-epoch
+    key chain (no key reuse between training batches and the noise)."""
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    nkeys = dp.client_noise_keys(keys)
+    assert not np.any(np.all(np.asarray(nkeys) == np.asarray(keys),
+                             axis=-1))
+    # and distinct across clients
+    assert len({tuple(np.asarray(k)) for k in nkeys}) == 4
+
+
+# ---------------------------------------------------------------------------
+# 5. Rényi accounting
+# ---------------------------------------------------------------------------
+def test_accountant_full_participation_closed_form():
+    """q=1 is the plain Gaussian mechanism: RDP(α) = α/(2z²), so ε after
+    one round is min_α [α/(2z²) + log(1/δ)/(α−1)] exactly."""
+    z, delta = 1.0, 1e-5
+    acct = RdpAccountant(z, 1.0, delta)
+    expected = min(a / (2 * z * z) + math.log(1 / delta) / (a - 1)
+                   for a in acct.orders)
+    assert acct.epsilon(1) == pytest.approx(expected, rel=1e-12)
+    assert acct.epsilon(0) == 0.0
+
+
+def test_accountant_monotone_in_rounds_noise_and_sampling():
+    acct = RdpAccountant(1.0, 0.25, 1e-5)
+    eps = [acct.epsilon(r) for r in (1, 10, 100)]
+    assert eps[0] < eps[1] < eps[2]
+    # more noise -> less eps
+    assert (RdpAccountant(2.0, 0.25, 1e-5).epsilon(10)
+            < RdpAccountant(1.0, 0.25, 1e-5).epsilon(10))
+    # subsampling amplifies: q < 1 spends less than q = 1
+    assert (RdpAccountant(1.0, 0.25, 1e-5).epsilon(10)
+            < RdpAccountant(1.0, 1.0, 1e-5).epsilon(10))
+    # zero noise carries no guarantee
+    assert RdpAccountant(0.0, 1.0, 1e-5).epsilon(5) == float("inf")
+
+
+def test_accountant_composition_is_linear_in_rdp():
+    """Composing r rounds multiplies the per-step RDP by r; at a fixed
+    order the bound grows linearly, so ε(r) is subadditive-ish but never
+    super-linear in the per-order bound: ε(2r) <= 2 ε(r) + slack from
+    the log(1/δ) term being counted once instead of twice."""
+    acct = RdpAccountant(1.2, 0.5, 1e-5)
+    assert acct.epsilon(20) <= 2 * acct.epsilon(10)
+
+
+def test_make_accountant_gating():
+    assert make_accountant(PrivacyConfig(), 1.0) is None
+    assert make_accountant(PrivacyConfig(clip_norm=1.0), 1.0) is None
+    acct = make_accountant(
+        PrivacyConfig(clip_norm=1.0, noise_multiplier=1.0), 0.5)
+    assert acct is not None and acct.sampling_rate == 0.5
+
+
+@pytest.mark.slow
+def test_history_records_eps_stream_across_engines_and_chunks():
+    """round_eps grows by one cumulative ε per round, matches the
+    accountant, continues across run() calls, and is identical between
+    the fused block, the chunked-logging path and the loop driver."""
+    priv = PrivacyConfig(clip_norm=0.5, noise_multiplier=1.0)
+    fed = _make_fed(priv, batch_groups=2)
+    hist = fed.run(rounds=3)
+    q = 2 / len(fed.train_groups)
+    acct = RdpAccountant(1.0, q, priv.target_delta,
+                         priv.accountant_orders)
+    np.testing.assert_allclose(hist.round_eps,
+                               [acct.epsilon(r) for r in (1, 2, 3)],
+                               rtol=1e-12)
+    hist2 = fed.run(rounds=2)  # continues the spend: rounds 4, 5
+    np.testing.assert_allclose(hist2.round_eps,
+                               [acct.epsilon(r) for r in (4, 5)],
+                               rtol=1e-12)
+    hist_chunked = _make_fed(priv, batch_groups=2).run(rounds=3,
+                                                       log_every=2)
+    np.testing.assert_allclose(hist_chunked.round_eps, hist.round_eps,
+                               rtol=1e-12)
+    hist_loop = _make_fed(priv, batch_groups=2).run(rounds=3,
+                                                    engine="loop")
+    np.testing.assert_allclose(hist_loop.round_eps, hist.round_eps,
+                               rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# backbone/LoRA trainers
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_backbone_round_applies_dp_pipeline():
+    """make_backbone_fedavg_round with privacy clips+noises the deltas:
+    the round runs, differs from the non-private round, and a zero-clip
+    config keeps the original signature (no noise_key argument)."""
+    from repro.configs import get_arch, smoke_variant
+    from repro.core import make_backbone_fedavg_round
+    from repro.data import LMDataConfig, synthetic_lm_batches
+
+    cfg = smoke_variant(get_arch("qwen2-0.5b"))
+    from repro.models import init_params
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adam(1e-3)
+    c = 2
+    agg = make_aggregator(AggConfig(), num_clients=c)
+    it = synthetic_lm_batches(LMDataConfig(
+        vocab_size=cfg.vocab_size, seq_len=16, global_batch=2, seed=0))
+    batches = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[jax.tree.map(lambda *ys: jnp.stack(ys), *[next(it)])
+          for _ in range(c)])
+    weights = jnp.full((c,), 0.5)
+    cp = broadcast_to_clients(params, c)
+    opt_states = jax.vmap(opt.init)(cp)
+    server_state = agg.init(params)
+
+    rnd_plain = make_backbone_fedavg_round(cfg, opt, 1, agg=agg)
+    out_plain, _, losses_plain, _ = jax.jit(rnd_plain)(
+        cp, opt_states, batches, weights, server_state)
+
+    priv = PrivacyConfig(clip_norm=1e-3, noise_multiplier=0.5)
+    rnd_priv = make_backbone_fedavg_round(cfg, opt, 1, agg=agg,
+                                          privacy=priv)
+    out_priv, _, losses_priv, _ = jax.jit(rnd_priv)(
+        cp, opt_states, batches, weights, server_state,
+        jax.random.PRNGKey(9))
+    # local training is untouched; only the aggregate differs
+    np.testing.assert_allclose(np.asarray(losses_plain),
+                               np.asarray(losses_priv), rtol=1e-6)
+    diffs = [float(jnp.max(jnp.abs(a - b))) for a, b in
+             zip(jax.tree.leaves(out_plain), jax.tree.leaves(out_priv))]
+    assert max(diffs) > 0.0
+    # disabled privacy keeps the 5-arg signature
+    rnd_off = make_backbone_fedavg_round(
+        cfg, opt, 1, agg=agg, privacy=PrivacyConfig())
+    out_off, _, _, _ = jax.jit(rnd_off)(
+        cp, opt_states, batches, weights, server_state)
+    for a, b in zip(jax.tree.leaves(out_plain), jax.tree.leaves(out_off)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_private_round_requires_aggregator():
+    from repro.configs import get_arch, smoke_variant
+    from repro.core import make_backbone_fedavg_round
+
+    cfg = smoke_variant(get_arch("qwen2-0.5b"))
+    with pytest.raises(ValueError, match="ServerAggregator"):
+        make_backbone_fedavg_round(
+            cfg, adam(1e-3), 1, agg=None,
+            privacy=PrivacyConfig(clip_norm=1.0))

@@ -9,8 +9,10 @@ pytest.importorskip(
     reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.configs import PrivacyConfig
 from repro.core import fedavg_stacked, normalize_weights
 from repro.core.fairness import fairness_index, js_distance
+from repro.core.privacy import clip_scales, privatize_flat
 from repro.kernels import fedavg_reduce
 from repro.kernels.ref import ref_fedavg_flat
 from repro.models.layers import softcap
@@ -78,6 +80,61 @@ def test_fedavg_kernel_matches_ref_random_shapes(c, p, seed):
     ref = ref_fedavg_flat(stacked, w)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 8), st.integers(1, 300),
+       st.floats(0.05, 5.0), st.integers(0, 2 ** 31 - 1))
+def test_clipped_delta_norms_never_exceed_bound(c, p, clip, seed):
+    """DP pipeline invariant (DESIGN.md §9): after clipping, every
+    client's flat-delta L2 norm is <= clip_norm, for any shape/scale."""
+    key = jax.random.PRNGKey(seed)
+    vecs = jax.random.normal(key, (c, p)) * 10.0 ** jax.random.randint(
+        jax.random.fold_in(key, 1), (c, 1), -2, 4)
+    keys = jax.random.split(jax.random.fold_in(key, 2), c)
+    out = privatize_flat(vecs, keys, PrivacyConfig(clip_norm=clip))
+    norms = np.linalg.norm(np.asarray(out), axis=1)
+    assert np.all(norms <= clip * (1 + 1e-4))
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 6), st.integers(1, 100),
+       st.floats(0.01, 1.0), st.integers(0, 2 ** 31 - 1))
+def test_clipping_is_scale_equivariant_below_the_bound(c, p, s, seed):
+    """For deltas that stay under the bound after scaling by s <= 1,
+    clip(s * d) == s * clip(d) == s * d: clipping is a no-op on the
+    whole homothety class below the bound (no hidden renormalization)."""
+    key = jax.random.PRNGKey(seed)
+    vecs = jax.random.normal(key, (c, p))
+    # normalize so every client sits exactly at norm 1, bound above it
+    vecs = vecs / jnp.maximum(
+        jnp.linalg.norm(vecs, axis=1, keepdims=True), 1e-12)
+    clip = 1.0 + 1e-3
+    assert np.all(np.asarray(clip_scales(vecs * s, clip)) == 1.0)
+    keys = jax.random.split(jax.random.fold_in(key, 1), c)
+    priv = PrivacyConfig(clip_norm=clip)
+    out_scaled = privatize_flat(vecs * s, keys, priv)
+    out = privatize_flat(vecs, keys, priv)
+    np.testing.assert_allclose(np.asarray(out_scaled),
+                               np.asarray(out) * s, rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 8), st.integers(1, 5000), st.floats(0.1, 3.0),
+       st.integers(0, 2 ** 31 - 1))
+def test_clip_reduce_kernel_matches_ref_random_shapes(c, p, clip, seed):
+    from repro.kernels import agg_clip_reduce
+    from repro.kernels.ref import ref_clip_reduce
+
+    key = jax.random.PRNGKey(seed)
+    stacked = jax.random.normal(key, (c, p)) * 3.0
+    w = normalize_weights(
+        jax.random.uniform(jax.random.fold_in(key, 1), (c,), minval=0.1,
+                           maxval=10.0))
+    out = agg_clip_reduce(stacked, w, clip=clip)
+    ref = ref_clip_reduce(stacked, w, clip=clip)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
 
 
 @settings(**SETTINGS)
