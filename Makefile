@@ -3,7 +3,8 @@
 # @pytest.mark.slow so the quick suite stays under a few minutes.
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-priv test-cov bench bench-round bench-smoke
+.PHONY: test test-fast test-priv test-comm test-cov bench bench-round \
+	bench-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -16,6 +17,11 @@ test-fast:
 test-priv:
 	$(PY) -m pytest -q tests/test_privacy.py tests/test_property.py
 
+# quick iteration on the delta-compression transport only
+# (tests/test_compression.py + the codec properties, DESIGN.md §10)
+test-comm:
+	$(PY) -m pytest -q tests/test_compression.py tests/test_property.py
+
 # tier-1 suite under pytest-cov (the CI job uploads coverage.xml as a
 # non-gating artifact; requires pytest-cov from requirements-dev.txt)
 test-cov:
@@ -27,10 +33,10 @@ bench-round:
 
 # reduced-config benchmark pass for the CI smoke job: exercises every
 # BENCH_*.json writer (round engine, aggregator sweep, attention
-# fwd+bwd, DP delta pipeline) in a few minutes
+# fwd+bwd, DP delta pipeline, compressed transport) in a few minutes
 bench-smoke:
 	$(PY) -m benchmarks.bench_round --rounds 30 --agg-rounds 10 --reps 2 \
-		--privacy --priv-rounds 30
+		--privacy --priv-rounds 30 --compress --comm-rounds 30
 
 bench:
 	$(PY) -m benchmarks.run

@@ -39,13 +39,26 @@ fused Pallas ``agg_clip_reduce`` kernel — plus the engine-level
 overhead (private vs baseline rounds/sec through the fused scan driver)
 and the accountant's final ε.
 
+A seventh section (``--compress``) benchmarks the delta-compression
+transport (DESIGN.md §10) and writes ``BENCH_comm.json``: analytic
+bytes-on-the-wire per codec, the COMPILED sharded-round all-gather byte
+counts (none vs int8, via a subprocess ``dryrun --gpo-fed`` lowering —
+the acceptance metric for the ~4× int8 collective saving), the fused
+``agg_quant_clip_reduce`` kernel vs the jnp transport chain wall-clock,
+and convergence (rounds-to-target-alignment) per codec with and without
+error feedback — so the accuracy/communication tradeoff is measured,
+not asserted.
+
 Interpret-mode honesty: on CPU the Pallas kernels run in interpret mode,
 whose absolute timings are meaningless next to compiled jnp (≈1000x
-slow). Every Pallas timing is tagged with its ``mode``; cross-mode
-speedup fields are only emitted on real hardware, and interpret-mode
-Pallas wall-clocks are skipped entirely unless ``--include-interpret``
-is passed (same-mode kernel-vs-kernel ratios, e.g. banded vs dense grid,
-are always reported — the grid is what they measure).
+slow). Every Pallas timing carries its ``mode``; cross-mode speedup
+fields are only emitted on real hardware, and interpret-mode Pallas
+wall-clocks are skipped unless ``--include-interpret`` is passed
+(same-mode kernel-vs-kernel ratios, e.g. banded vs dense grid, are
+always reported — the grid is what they measure). Skipped timings emit
+a structured ``{"skipped": true, "reason": ...}`` block — never a bare
+null or a prose-polluted mode string — so BENCH_*.json stays
+machine-diffable across PRs.
 
 CPU runtime knobs (set before jax import, override via env): the legacy
 XLA:CPU runtime + single-thread eigen minimise per-op overhead for the
@@ -84,12 +97,44 @@ ATTN_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                              "BENCH_attn.json")
 PRIV_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                              "BENCH_priv.json")
+COMM_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_comm.json")
 
 
 def _pallas_mode() -> str:
     """How Pallas kernels execute on this backend (tags every Pallas
     wall-clock so interpret numbers are never mistaken for native)."""
     return "native" if jax.default_backend() == "tpu" else "interpret"
+
+
+def _skipped(reason: str) -> dict:
+    """Structured skip marker: every intentionally-absent measurement is
+    a ``{"skipped": true, "reason": ...}`` block instead of a bare null
+    or a prose-polluted mode string, so BENCH_*.json diffs cleanly
+    across PRs."""
+    return {"skipped": True, "reason": reason}
+
+
+_INTERPRET_SKIP = ("interpret-mode Pallas wall-clock is not comparable to "
+                   "compiled jnp; pass --include-interpret to record it")
+_CROSS_MODE_SKIP = ("cross-mode speedup (interpret Pallas vs compiled jnp) "
+                    "is meaningless; only emitted on native hardware")
+
+
+def _pallas_wall(t_pallas, t_jnp: float, gb: float, mode: str) -> dict:
+    """The shared Pallas wall-clock entry: timing + same-mode speedup
+    when measured, the structured skip block otherwise. One definition
+    so the skip contract cannot drift between benchmark sections."""
+    if not t_pallas:
+        return {**_skipped(_INTERPRET_SKIP), "mode": mode}
+    return {
+        "mode": mode,
+        "us": t_pallas * 1e6,
+        "gbps": gb / t_pallas,
+        # cross-mode speedups are only honest on native hardware
+        "vs_jnp_speedup": (t_jnp / t_pallas if mode == "native"
+                           else _skipped(_CROSS_MODE_SKIP)),
+    }
 
 
 def _best_of(fn, reps: int) -> float:
@@ -226,7 +271,6 @@ def bench_aggregation(c: int = 32, p: int = 1_000_000, reps: int = 5,
         t_pallas = _best_of(lambda: fedavg_reduce(stacked, w), reps)
     else:
         t_pallas = None
-        mode = "interpret (skipped; pass --include-interpret)"
 
     # flatten path: a client-stacked tree with 1e6 params over 16 leaves
     leaves = 16
@@ -254,14 +298,7 @@ def bench_aggregation(c: int = 32, p: int = 1_000_000, reps: int = 5,
         "clients": c, "params": p,
         "jnp_reduce_us": t_jnp * 1e6,
         "jnp_reduce_gbps": gb / t_jnp,
-        "pallas_reduce_us": t_pallas * 1e6 if t_pallas else None,
-        "pallas_reduce_gbps": gb / t_pallas if t_pallas else None,
-        # speedup vs jnp is a same-mode comparison only (native Pallas
-        # vs compiled jnp); never emitted for interpret-mode timings
-        "pallas_vs_jnp_speedup": (t_jnp / t_pallas
-                                  if t_pallas and _pallas_mode() == "native"
-                                  else None),
-        "pallas_mode": mode,
+        "pallas_reduce": _pallas_wall(t_pallas, t_jnp, gb, mode),
         "loop_flatten_us": t_loop * 1e6,
         "vmapped_flatten_us": t_vmap * 1e6,
         "flatten_speedup": t_loop / t_vmap,
@@ -271,7 +308,7 @@ def bench_aggregation(c: int = 32, p: int = 1_000_000, reps: int = 5,
     }
     pallas_str = (f"{gb / t_pallas:.2f} GB/s" if t_pallas else "skipped")
     print(f"aggregation/reduce: jnp {gb / t_jnp:.2f} GB/s, "
-          f"pallas[{result['pallas_mode']}] {pallas_str}")
+          f"pallas[{mode}] {pallas_str}")
     print(f"aggregation/flatten: loop {t_loop * 1e6:,.0f} us, "
           f"vmapped {t_vmap * 1e6:,.0f} us "
           f"({result['flatten_speedup']:.2f}x steady, "
@@ -376,6 +413,19 @@ def bench_attn_fwd_bwd(h: int = 4, hd: int = 32, reps: int = 3,
 
         fwd_banded, fwd_full = gpo_tile_counts(s, m, b, b)
         bwd_banded, bwd_full = gpo_tile_counts_bwd(s, m, b, b)
+        if mode == "native" or include_interpret:
+            pallas_wall = {
+                "mode": mode,
+                "banded_fwd_bwd_us": t_banded * 1e6,
+                "dense_grid_fwd_bwd_us": t_full * 1e6,
+                # cross-mode ratio: only honest when the kernels are
+                # native
+                "speedup_vs_jnp_dense": (t_jnp / t_banded
+                                         if mode == "native"
+                                         else _skipped(_CROSS_MODE_SKIP)),
+            }
+        else:
+            pallas_wall = {**_skipped(_INTERPRET_SKIP), "mode": mode}
         entry = {
             "seq": s, "num_ctx": m, "num_tgt": s - m, "block": b,
             "fwd_tiles": {"banded": fwd_banded, "dense_grid": fwd_full},
@@ -385,18 +435,10 @@ def bench_attn_fwd_bwd(h: int = 4, hd: int = 32, reps: int = 3,
             "tiles_visited_ratio": (fwd_banded + bwd_banded)
             / (fwd_full + bwd_full),
             "jnp_dense_fwd_bwd_us": t_jnp * 1e6,
-            "banded_fwd_bwd_us": (t_banded * 1e6
-                                  if mode == "native" or include_interpret
-                                  else None),
-            "dense_grid_fwd_bwd_us": (t_full * 1e6
-                                      if mode == "native" or include_interpret
-                                      else None),
+            "pallas_wall": pallas_wall,
             # same-mode ratio (both sides run the identical custom-VJP
-            # machinery; only the visited grid differs)
+            # machinery; only the visited grid differs) — always honest
             "speedup_vs_dense_grid": t_full / t_banded,
-            # cross-mode ratio: only honest when the kernels are native
-            "speedup_vs_jnp_dense": (t_jnp / t_banded
-                                     if mode == "native" else None),
         }
         result["shapes"].append(entry)
         print(f"attn_fwd_bwd s={s} m={m}: tiles "
@@ -454,7 +496,6 @@ def bench_privacy(rounds: int, c: int = 32, p: int = 1_000_000,
             lambda: agg_clip_reduce(stacked, w, clip=priv.clip_norm), reps)
     else:
         t_pal = None
-        mode = "interpret (skipped; pass --include-interpret)"
 
     result = {
         "clip_reduce": {
@@ -464,19 +505,12 @@ def bench_privacy(rounds: int, c: int = 32, p: int = 1_000_000,
             "jnp_clip_us": t_jnp * 1e6,
             "jnp_clip_gbps": gb / t_jnp,
             "clip_overhead_vs_baseline": t_jnp / t_base,
-            "pallas_clip_us": t_pal * 1e6 if t_pal else None,
-            "pallas_clip_gbps": gb / t_pal if t_pal else None,
-            # cross-mode comparisons only on real hardware
-            "pallas_vs_jnp_speedup": (t_jnp / t_pal
-                                      if t_pal and _pallas_mode() == "native"
-                                      else None),
-            "pallas_mode": mode,
+            "pallas_clip": _pallas_wall(t_pal, t_jnp, gb, mode),
         },
     }
     pal_str = f"{gb / t_pal:.2f} GB/s" if t_pal else "skipped"
     print(f"privacy/clip_reduce: baseline {gb / t_base:.2f} GB/s, "
-          f"jnp clip {gb / t_jnp:.2f} GB/s, "
-          f"pallas[{result['clip_reduce']['pallas_mode']}] {pal_str}")
+          f"jnp clip {gb / t_jnp:.2f} GB/s, pallas[{mode}] {pal_str}")
 
     # engine-level overhead at the round-engine benchmark's model scale
     data = make_survey_data(SurveyConfig(
@@ -512,6 +546,208 @@ def bench_privacy(rounds: int, c: int = 32, p: int = 1_000_000,
     return result
 
 
+# ---------------------------------------------------------------------------
+# 6. compressed transport: wire bytes, fused kernel, convergence
+# ---------------------------------------------------------------------------
+def _lower_comm_bytes(compress: str, agg: str = "median",
+                      clients: int = 8) -> dict:
+    """Compile the sharded round in a SUBPROCESS ``dryrun --gpo-fed`` and
+    return its collective byte counts. A subprocess because the forced
+    multi-device host platform must be set before jax import, which this
+    process already spent on the benchmark flags."""
+    import subprocess
+    import sys
+    import tempfile
+
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        path = f.name
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--gpo-fed",
+           "--agg", agg, "--compress", compress, "--clients", str(clients),
+           "--out", path]
+    try:
+        try:
+            subprocess.run(cmd, check=True, capture_output=True, text=True,
+                           timeout=900)
+        except subprocess.CalledProcessError as e:
+            # surface the actual XLA/JAX error, not just the exit status
+            raise RuntimeError(
+                f"dryrun exited {e.returncode}: "
+                f"{(e.stderr or '').strip()[-500:]}") from e
+        with open(path) as fh:
+            return json.loads(fh.read().strip().splitlines()[-1])
+    finally:
+        if os.path.exists(path):
+            os.unlink(path)
+
+
+def bench_comm(rounds: int, c: int = 16, p: int = 262_144, reps: int = 3,
+               topk_frac: float = 0.01, include_interpret: bool = False,
+               skip_lower: bool = False) -> dict:
+    """Delta-compression transport benchmark (DESIGN.md §10).
+
+    Bytes: the analytic per-round client→server payload per codec, plus
+    the COMPILED sharded-round all-gather bytes (robust family, none vs
+    int8 — the collective the codec shrinks), both flat-parsed and
+    trip-count-aware via ``launch/hlo_cost.py``.
+
+    Wall-clock: the full (C, P) transport chain — DP release + EF +
+    int8 codec + weighted reduce — as the fused
+    ``agg_quant_clip_reduce`` kernel vs the jnp chain vs the
+    uncompressed baseline reduce (interpret-honesty rule applies).
+
+    Convergence: rounds-to-target-alignment per codec with and without
+    error feedback against the uncompressed baseline, through the fused
+    scan engine at the round-engine benchmark's model scale.
+    """
+    from repro.configs import (AggConfig, CompressionConfig, FedConfig,
+                               GPOConfig, PrivacyConfig)
+    from repro.core import FederatedGPO, make_aggregator
+    from repro.core import compression as cmod
+    from repro.data import SurveyConfig, make_survey_data, split_groups
+
+    result = {}
+
+    # -- analytic bytes-on-the-wire per round (client uploads) ----------
+    k = cmod.topk_count(p, topk_frac)
+    dense = 4 * c * p
+    int8 = c * (p + 4)  # int8 payload + one f32 scale per client
+    topk_logical = c * k * 8  # f32 value + int32 index per kept coord
+    result["payload_bytes"] = {
+        "clients": c, "params": p,
+        "dense_f32": dense,
+        "int8": int8,
+        "int8_reduction": dense / int8,
+        "topk_frac": topk_frac,
+        "topk_kept_per_client": k,
+        # what a sparse encoding would ship; the simulation (and the
+        # sharded all-gather) keeps the dense f32 layout — recorded so
+        # the gap between logical and simulated bytes is explicit
+        "topk_logical": topk_logical,
+        "topk_logical_reduction": dense / topk_logical,
+    }
+    print(f"comm/payload: dense {dense/1e6:.1f} MB, int8 {int8/1e6:.1f} MB "
+          f"({dense/int8:.2f}x), topk logical {topk_logical/1e6:.2f} MB "
+          f"({dense/topk_logical:.1f}x)")
+
+    # -- compiled sharded all-gather bytes (the acceptance metric) ------
+    if skip_lower:
+        result["sharded_allgather"] = _skipped(
+            "--skip-lower passed (subprocess dryrun lowering disabled)")
+    else:
+        try:
+            lowered = {kind: _lower_comm_bytes(kind)
+                       for kind in ("none", "int8")}
+            ag = {kind: d["hlo_cost_collective_bytes_by_kind"].get(
+                "all-gather", 0.0) for kind, d in lowered.items()}
+            result["sharded_allgather"] = {
+                "agg": "median", "clients": 8,
+                "bytes_f32": ag["none"],
+                "bytes_int8": ag["int8"],
+                "reduction": ag["none"] / ag["int8"],
+                "flat_hlo_bytes": {
+                    kind: d["collective_bytes_by_kind"]
+                    for kind, d in lowered.items()},
+            }
+            print(f"comm/sharded_allgather: f32 {ag['none']:,.0f} B -> "
+                  f"int8 {ag['int8']:,.0f} B "
+                  f"({ag['none'] / ag['int8']:.2f}x fewer)")
+        except Exception as e:  # lowering is environment-sensitive
+            result["sharded_allgather"] = _skipped(
+                f"dryrun lowering failed: {type(e).__name__}: {e}")
+            print(f"comm/sharded_allgather: skipped ({e})")
+
+    # -- kernel vs jnp transport wall-clock -----------------------------
+    priv = PrivacyConfig(clip_norm=1.0, noise_multiplier=0.5)
+    comp = CompressionConfig(kind="int8")
+    agg = make_aggregator(AggConfig(), num_clients=c)
+    key = jax.random.PRNGKey(11)
+    stacked = jax.random.normal(key, (c, p))
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (c,)))
+    keys = jax.random.split(jax.random.fold_in(key, 2), c)
+    resid = jnp.zeros((c, p), jnp.float32)
+    gb = c * p * 4 / 1e9
+
+    base_fn = jax.jit(lambda s, w: jnp.einsum("c,cp->p", w, s))
+    base_fn(stacked, w)
+    t_base = _best_of(lambda: base_fn(stacked, w), reps)
+    jnp_fn = jax.jit(functools.partial(
+        cmod.transport_delta_flat, privacy=priv, comp=comp, agg=agg,
+        use_pallas=False))
+    jnp_fn(stacked, w, keys, resid=resid)
+    t_jnp = _best_of(lambda: jnp_fn(stacked, w, keys, resid=resid), reps)
+    mode = _pallas_mode()
+    if mode == "native" or include_interpret:
+        # like-for-like with the jnp chain: the pallas transport also
+        # samples its noise + rounding uniforms inside the timed call
+        pal_fn = jax.jit(functools.partial(
+            cmod.transport_delta_flat, privacy=priv, comp=comp, agg=agg,
+            use_pallas=True))
+        pal_fn(stacked, w, keys, resid=resid)
+        t_pal = _best_of(
+            lambda: pal_fn(stacked, w, keys, resid=resid), reps)
+    else:
+        t_pal = None
+    result["transport_kernel"] = {
+        "clients": c, "params": p, "clip": priv.clip_norm,
+        "noise_multiplier": priv.noise_multiplier,
+        "baseline_reduce_us": t_base * 1e6,
+        "baseline_reduce_gbps": gb / t_base,
+        "jnp_transport_us": t_jnp * 1e6,
+        "jnp_transport_gbps": gb / t_jnp,
+        "transport_overhead_vs_baseline": t_jnp / t_base,
+        "pallas_fused": _pallas_wall(t_pal, t_jnp, gb, mode),
+    }
+    pal_str = f"{gb / t_pal:.2f} GB/s" if t_pal else "skipped"
+    print(f"comm/transport: baseline {gb / t_base:.2f} GB/s, jnp chain "
+          f"{gb / t_jnp:.2f} GB/s, fused pallas[{mode}] {pal_str}")
+
+    # -- convergence: rounds to target alignment, EF on/off -------------
+    data = make_survey_data(SurveyConfig(
+        num_groups=17, num_questions=16, d_embed=4, seed=0))
+    train_groups, eval_groups = split_groups(data, train_frac=0.6, seed=0)
+    gcfg = GPOConfig(d_embed=4, d_model=8, num_layers=1, num_heads=1,
+                     d_ff=16)
+    sweep = {
+        "none": CompressionConfig(),
+        "int8_ef": CompressionConfig(kind="int8", error_feedback=True),
+        "int8_noef": CompressionConfig(kind="int8", error_feedback=False),
+        "topk_ef": CompressionConfig(kind="topk", topk_frac=topk_frac,
+                                     error_feedback=True),
+        "topk_noef": CompressionConfig(kind="topk", topk_frac=topk_frac,
+                                       error_feedback=False),
+    }
+    runs = {}
+    for label, ccfg in sweep.items():
+        fcfg = FedConfig(num_clients=len(train_groups), rounds=rounds,
+                         local_epochs=6, eval_every=5, num_context=1,
+                         num_target=1, compression=ccfg)
+        fed = FederatedGPO(gcfg, fcfg, data, train_groups, eval_groups)
+        hist = fed.run(rounds=rounds)
+        dt = _best_of(lambda: fed.run(rounds=rounds), max(1, reps - 1))
+        runs[label] = (hist, rounds / dt)
+    target = 0.98 * runs["none"][0].eval_mean_as[-1]
+    conv = {"rounds": rounds, "target_mean_as": target}
+    for label, (hist, rps) in runs.items():
+        reached = [r for r, a in zip(hist.eval_rounds, hist.eval_mean_as)
+                   if a >= target]
+        conv[label] = {
+            "final_mean_as": hist.eval_mean_as[-1],
+            "final_loss": hist.round_loss[-1],
+            "rounds_per_sec": rps,
+            "rounds_to_target": (reached[0] if reached
+                                 else _skipped("target alignment not "
+                                               f"reached in {rounds} "
+                                               "rounds")),
+        }
+        rt = conv[label]["rounds_to_target"]
+        print(f"comm/convergence {label}: AS={hist.eval_mean_as[-1]:.4f} "
+              f"rounds_to_target="
+              f"{rt if isinstance(rt, int) else 'not reached'} "
+              f"({rps:,.1f} r/s)")
+    result["convergence"] = conv
+    return result
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=200)
@@ -529,6 +765,17 @@ def main() -> None:
                          "write BENCH_priv.json (DESIGN.md §9)")
     ap.add_argument("--priv-rounds", type=int, default=100,
                     help="rounds per engine config in the privacy bench")
+    ap.add_argument("--compress", action="store_true",
+                    help="also run the delta-compression transport "
+                         "benchmark and write BENCH_comm.json "
+                         "(DESIGN.md §10)")
+    ap.add_argument("--comm-rounds", type=int, default=60,
+                    help="rounds per codec config in the compression "
+                         "convergence sweep")
+    ap.add_argument("--skip-lower", action="store_true",
+                    help="skip the subprocess dryrun lowering in the "
+                         "compression bench (the compiled all-gather "
+                         "byte counts)")
     ap.add_argument("--include-interpret", action="store_true",
                     help="also time Pallas kernels in interpret mode on "
                          "CPU (absolute numbers are NOT comparable to "
@@ -572,6 +819,20 @@ def main() -> None:
         with open(PRIV_OUT_PATH, "w") as f:
             json.dump(priv_report, f, indent=2)
         print(f"wrote {os.path.abspath(PRIV_OUT_PATH)}")
+
+    if args.compress:
+        comm_report = {
+            "backend": jax.default_backend(),
+            "xla_flags": os.environ.get("XLA_FLAGS", ""),
+            "prng": "rbg",
+            "comm": bench_comm(
+                args.comm_rounds, reps=min(args.reps, 3),
+                include_interpret=args.include_interpret,
+                skip_lower=args.skip_lower),
+        }
+        with open(COMM_OUT_PATH, "w") as f:
+            json.dump(comm_report, f, indent=2)
+        print(f"wrote {os.path.abspath(COMM_OUT_PATH)}")
 
     if not args.skip_agg:
         agg_report = {

@@ -6,11 +6,17 @@ registry aggregation strategy (DESIGN.md §7). ``--clip-norm`` /
 ``--noise-multiplier`` turn on the DP client-delta pipeline
 (DESIGN.md §9): adapters are clipped + noised before aggregation and
 the Rényi accountant's ε is printed alongside the losses.
+``--compress`` / ``--topk-frac`` add the delta codec (DESIGN.md §10):
+int8 stochastic quantization or top-k sparsification with an EF21
+error-feedback residual, applied AFTER the DP release — the printed
+upload estimate shows the communication saving on the LoRA payload.
 
   PYTHONPATH=src python examples/fedlora_finetune.py --rounds 150 \
       --local-steps 2 --mode lora --agg fedavgm
   PYTHONPATH=src python examples/fedlora_finetune.py --rounds 50 \
       --mode lora --clip-norm 0.5 --noise-multiplier 0.6
+  PYTHONPATH=src python examples/fedlora_finetune.py --rounds 50 \
+      --mode lora --compress int8
 """
 import argparse
 import time
@@ -19,7 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import AggConfig, PrivacyConfig, get_arch, override
+from repro.configs import (AggConfig, CompressionConfig, PrivacyConfig,
+                           get_arch, override)
 from repro.core.privacy import make_accountant
 from repro.core import (
     AGGREGATORS,
@@ -35,6 +42,7 @@ from repro.data import LMDataConfig, synthetic_lm_batches
 from repro.launch.specs import count_params
 from repro.models import init_params
 from repro.optim import adam
+from repro.utils.pytree import tree_count_params
 
 
 def hundred_m_config():
@@ -65,6 +73,14 @@ def main() -> None:
                     help="per-client L2 clip on the flat delta (0 = off)")
     ap.add_argument("--noise-multiplier", type=float, default=0.0,
                     help="Gaussian noise std = z * clip-norm per client")
+    # delta codec (DESIGN.md §10): none = off
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "int8", "topk"],
+                    help="client->server delta codec")
+    ap.add_argument("--topk-frac", type=float, default=0.01,
+                    help="fraction of coordinates kept (--compress topk)")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="disable the EF21 error-feedback residual")
     args = ap.parse_args()
 
     cfg = hundred_m_config()
@@ -88,17 +104,33 @@ def main() -> None:
     if priv.enabled:
         print(f"DP pipeline on: clip={priv.clip_norm} "
               f"z={priv.noise_multiplier} (DESIGN.md §9)")
+    comp = CompressionConfig(kind=args.compress, topk_frac=args.topk_frac,
+                             error_feedback=not args.no_error_feedback)
+    comp.validate()
     if args.mode == "full":
         payload = params
         rnd = jax.jit(make_backbone_fedavg_round(cfg, opt, args.local_steps,
-                                                 agg=agg, privacy=priv))
+                                                 agg=agg, privacy=priv,
+                                                 compression=comp))
     else:
         payload = init_lora(params, key, rank=8)
         print(f"LoRA payload: {lora_param_count(payload)/1e6:.2f}M params "
               f"({100*lora_param_count(payload)/count_params(cfg):.2f}% of "
               "the backbone) — the federated communication volume")
         rnd = jax.jit(make_fedlora_round(cfg, params, opt, args.local_steps,
-                                         agg=agg, privacy=priv))
+                                         agg=agg, privacy=priv,
+                                         compression=comp))
+    pdim = tree_count_params(payload)
+    if comp.enabled:
+        from repro.core.compression import topk_count
+
+        dense = 4 * pdim
+        wire = (pdim + 4 if comp.kind == "int8"
+                else 8 * topk_count(pdim, comp.topk_frac))
+        print(f"compression on: {comp.kind} "
+              f"(EF={'on' if comp.error_feedback else 'off'}) — per-client "
+              f"upload {wire/1e6:.2f} MB vs {dense/1e6:.2f} MB dense f32 "
+              f"({dense/wire:.1f}x; DESIGN.md §10)")
 
     client_state = broadcast_to_clients(payload, c)
     opt_states = jax.vmap(opt.init)(client_state)
@@ -106,6 +138,9 @@ def main() -> None:
 
     accountant = make_accountant(priv, 1.0)  # full participation
     noise_base = jax.random.PRNGKey(23)
+    ef = comp.enabled and comp.error_feedback
+    need_key = comp.enabled and (priv.enabled or comp.needs_rng)
+    resid = jnp.zeros((c, pdim), jnp.float32) if ef else None
     t0 = time.time()
     total_steps = 0
     for r in range(args.rounds):
@@ -116,9 +151,17 @@ def main() -> None:
               for i in range(c)])
         round_args = (client_state, opt_states, batches, weights,
                       server_state)
-        if priv.enabled:
+        if comp.enabled:
+            if ef:
+                round_args += (resid,)
+            if need_key:
+                round_args += (jax.random.fold_in(noise_base, r),)
+        elif priv.enabled:
             round_args += (jax.random.fold_in(noise_base, r),)
-        client_state, opt_states, losses, server_state = rnd(*round_args)
+        out = rnd(*round_args)
+        client_state, opt_states, losses, server_state = out[:4]
+        if ef:
+            resid = out[4]
         total_steps += c * args.local_steps
         if r % max(1, args.rounds // 15) == 0:
             eps = (f" eps={accountant.epsilon(r + 1):.3f}"

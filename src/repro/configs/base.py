@@ -237,6 +237,64 @@ class PrivacyConfig:
 
 
 @dataclass(frozen=True)
+class CompressionConfig:
+    """Client→server delta-compression stage (DESIGN.md §10).
+
+    Sits BETWEEN the privacy pipeline and the ``ServerAggregator``: the
+    (possibly privatized) flat client delta is compressed AFTER the DP
+    release — compression is post-processing of the released value, so ε
+    is unaffected — and the server consumes the decompressed
+    ("transmitted") values. Two codecs:
+
+    * ``int8`` — per-client symmetric quantization: scale s_c =
+      max|d_c| / 127, values stochastically rounded to int8 (unbiased:
+      E[Q(x)] = x; ``stochastic=False`` rounds to nearest). On the
+      sharded engine the robust-aggregator family all-gathers the int8
+      payload + f32 scales instead of f32 vectors (~4× fewer collective
+      bytes); the linear family dequantizes shard-locally before its
+      unchanged one-psum.
+    * ``topk`` — magnitude sparsification: per client, entries with
+      |d_c[p]| below the ⌈topk_frac·P⌉-th largest magnitude are zeroed
+      (ties at the threshold are kept, so at least k survive).
+
+    ``error_feedback`` carries an EF21-style per-client residual
+    e_c ← (d̃_c + e_c) − Q(d̃_c + e_c) in the round state (the fused
+    scan carry, next to ``AggState``), so compression error accumulates
+    into later rounds instead of being lost — the standard fix for
+    biased codecs like top-k. ``kind="none"`` (default) disables the
+    stage entirely: the engines statically trace the exact
+    pre-compression computation (bit-equal, pinned by
+    tests/test_compression.py).
+    """
+
+    kind: str = "none"  # none | int8 | topk
+    # topk: fraction of the flattened parameter axis kept per client
+    topk_frac: float = 0.01
+    # EF21-style error-feedback residual carried across rounds
+    error_feedback: bool = True
+    # int8: stochastic rounding (unbiased) vs round-to-nearest
+    stochastic: bool = True
+
+    @property
+    def enabled(self) -> bool:
+        return self.kind != "none"
+
+    @property
+    def needs_rng(self) -> bool:
+        """The codec draws per-client randomness (stochastic rounding)."""
+        return self.kind == "int8" and self.stochastic
+
+    def validate(self) -> None:
+        if self.kind not in ("none", "int8", "topk"):
+            raise ValueError(
+                f"compression kind {self.kind!r} must be one of "
+                "'none' | 'int8' | 'topk'")
+        if self.kind == "topk" and not 0.0 < self.topk_frac <= 1.0:
+            raise ValueError(
+                f"topk_frac={self.topk_frac} must lie in (0, 1]")
+
+
+@dataclass(frozen=True)
 class AggConfig:
     """Server-aggregation strategy (DESIGN.md §7).
 
@@ -320,6 +378,12 @@ class FedConfig:
     # with Rényi-DP accounting into History.round_eps. The default
     # (clip_norm=0) traces the exact pre-privacy computation.
     privacy: PrivacyConfig = PrivacyConfig()
+    # client→server delta compression (DESIGN.md §10): int8 stochastic
+    # quantization or top-k sparsification with an EF21-style error-
+    # feedback residual, applied AFTER the DP release and BEFORE the
+    # aggregator. The default (kind="none") traces the exact
+    # pre-compression computation.
+    compression: CompressionConfig = CompressionConfig()
     # runtime-level override of GPOConfig.use_pallas_attention: None
     # defers to the model config; True/False forces the attention path
     # for every engine built from this FedConfig (FederatedGPO,

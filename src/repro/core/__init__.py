@@ -21,6 +21,14 @@ from repro.core.aggregation import (  # noqa: F401
     make_aggregator,
 )
 from repro.core.federated import FederatedGPO, History, make_sharded_round  # noqa: F401
+from repro.core.compression import (  # noqa: F401
+    client_uniform,
+    dequantize_int8,
+    quantize_int8,
+    sparsify_topk,
+    topk_thresholds,
+    transport_delta_flat,
+)
 from repro.core.privacy import (  # noqa: F401
     RdpAccountant,
     clip_noise_reduce,

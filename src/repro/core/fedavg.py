@@ -68,9 +68,26 @@ def fedavg_allreduce(local_params: PyTree, weight: jnp.ndarray,
         local_params)
 
 
+# default-strategy aggregator for fedavg_flat, built once on first use
+# (the fedavg builder ignores num_clients; only adaptive consumes it)
+_FEDAVG_AGG = None
+
+
 def fedavg_flat(stacked_params: PyTree, weights: jnp.ndarray) -> PyTree:
-    """Flattened-vector FedAvg (the Pallas `fedavg_reduce` contract)."""
+    """Flattened-vector FedAvg (the Pallas `fedavg_reduce` contract),
+    routed through the aggregation registry: the ``fedavg`` strategy's
+    ``reduce_flat`` is the single implementation of the weighted flat
+    mean (this helper predates the PR 2 registry and used to duplicate
+    it). The lazy import + cached aggregator keep the module import
+    graph acyclic — ``core.aggregation`` imports this module at top
+    level — without rebuilding the strategy per call."""
+    global _FEDAVG_AGG
+    if _FEDAVG_AGG is None:
+        from repro.configs.base import AggConfig
+        from repro.core.aggregation import make_aggregator
+
+        _FEDAVG_AGG = make_aggregator(AggConfig(), num_clients=0)
     like = tree_index(stacked_params, 0)
     vecs = tree_ravel_clients(stacked_params)  # (C, P)
-    avg = jnp.einsum("c,cp->p", jnp.asarray(weights, jnp.float32), vecs)
+    avg = _FEDAVG_AGG.reduce_flat(vecs, jnp.asarray(weights, jnp.float32))
     return tree_unflatten_from_vector(avg, like)

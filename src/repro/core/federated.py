@@ -10,7 +10,10 @@ Round structure (faithful to the paper):
   3. clients transmit parameter *deltas*; with ``FedConfig.privacy``
      enabled each flat delta is L2-clipped and Gaussian-noised BEFORE it
      leaves the client (DESIGN.md §9, ``core/privacy.py`` — the Rényi
-     accountant folds the per-round ε into ``History.round_eps``); the
+     accountant folds the per-round ε into ``History.round_eps``); with
+     ``FedConfig.compression`` enabled the released delta is then int8-
+     quantized or top-k-sparsified with an EF21 error-feedback residual
+     (DESIGN.md §10, ``core/compression.py``); the
      server reduces the (privatized) deltas and applies the configured
      ``ServerAggregator`` update (DESIGN.md §7 — the paper's Eq. 2-3
      FedAvg is the default strategy) and redistributes.
@@ -51,7 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig, GPOConfig
-from repro.core import fairness, privacy as dp
+from repro.core import compression as cx, fairness, privacy as dp
 from repro.core.aggregation import ServerAggregator, make_aggregator
 from repro.core.fedavg import (
     broadcast_to_clients,
@@ -63,6 +66,7 @@ from repro.data.surveys import SurveyData, sample_icl_batch
 from repro.kernels import fedavg_reduce
 from repro.optim import adam
 from repro.utils.pytree import (
+    tree_count_params,
     tree_index,
     tree_ravel_clients,
     tree_sq_norm,
@@ -155,6 +159,7 @@ class FederatedGPO:
         gpo_cfg = fed_cfg.resolve_gpo(gpo_cfg)  # runtime attention override
         assert gpo_cfg.d_embed == data.phi.shape[-1]
         fed_cfg.privacy.validate()
+        fed_cfg.compression.validate()
         self.gpo_cfg, self.fed_cfg, self.data = gpo_cfg, fed_cfg, data
         self.train_groups = jnp.asarray(train_groups, jnp.int32)
         self.eval_groups = jnp.asarray(eval_groups, jnp.int32)
@@ -167,6 +172,16 @@ class FederatedGPO:
         key = jax.random.PRNGKey(fed_cfg.seed)
         self.global_params = init_gpo_params(gpo_cfg, key)
         self.server_state = self.agg.init(self.global_params)
+        # EF21-style compression residual (DESIGN.md §10): one flat f32
+        # row per client, carried across rounds next to the server state
+        # (None keeps the pre-compression trace byte-identical).
+        comp = fed_cfg.compression
+        if comp.enabled and comp.error_feedback:
+            self.ef_resid = jnp.zeros(
+                (len(train_groups), tree_count_params(self.global_params)),
+                jnp.float32)
+        else:
+            self.ef_resid = None
         per_client = broadcast_to_clients(self.global_params,
                                           len(train_groups))
         self.opt_states = jax.vmap(self.opt.init)(per_client)
@@ -189,8 +204,9 @@ class FederatedGPO:
 
         agg = self.agg
         priv = fed_cfg.privacy
+        ef = comp.enabled and comp.error_feedback
 
-        def round_step(global_params, opt_states, server_state, key):
+        def round_step(global_params, opt_states, server_state, resid, key):
             k_sub, k_train = jax.random.split(key)
             if m < num_clients:
                 idx = jax.random.choice(k_sub, num_clients, (m,),
@@ -215,7 +231,27 @@ class FederatedGPO:
             # the server reduces over the client axis and applies its
             # stateful update (Eq. 3 FedAvg being the default strategy).
             deltas = tree_sub(new_client_params, client_params)
-            if priv.enabled:
+            if comp.enabled:
+                # compressed transport (DESIGN.md §10): DP release (if
+                # any) THEN the codec — quantization/sparsification is
+                # post-processing of the released value, so ε is
+                # untouched — THEN the client-axis reduction. The EF
+                # residual rows of this round's participants update in
+                # place; non-sampled clients keep theirs.
+                w_eff = agg.weigh(server_state, w, idx)
+                r_sub = resid[idx] if ef else None
+                delta_vec, new_r = cx.transport_delta_flat(
+                    tree_ravel_clients(deltas), w_eff, keys, priv, comp,
+                    agg, r_sub,
+                    use_pallas=fed_cfg.use_pallas_aggregation)
+                if ef:
+                    resid = resid.at[idx].set(new_r)
+                delta = tree_unflatten_from_vector(delta_vec,
+                                                   global_params)
+                new_global, server_state = agg.apply(
+                    server_state, global_params, delta, losses=losses,
+                    idx=idx)
+            elif priv.enabled:
                 # DP pipeline (DESIGN.md §9): clip + per-client noise on
                 # the flat delta matrix BEFORE the aggregator. Noise keys
                 # fold out of the per-client training keys, so both
@@ -238,7 +274,7 @@ class FederatedGPO:
                 new_global, server_state = agg.step(
                     server_state, global_params, deltas, w, losses=losses,
                     idx=idx)
-            return new_global, opt_states, server_state, losses
+            return new_global, opt_states, server_state, resid, losses
 
         def eval_fn(global_params, key):
             keys = jax.random.split(key, len(eval_groups))
@@ -252,31 +288,34 @@ class FederatedGPO:
         # the rounds that also run the Eq. 4 evaluation; skipped rounds
         # emit zeros that the host discards, so metric accumulation stays
         # on device and the block performs exactly one host transfer.
-        # Only the per-client optimizer buffers are donated: callers (and
-        # the seed tests) legitimately hold references to the previous
-        # global model across ``run`` calls. The server-aggregator state
-        # (momentum / moments / adaptive scores) rides in the scan carry
-        # so stateful strategies fuse exactly like stateless FedAvg.
-        @functools.partial(jax.jit, donate_argnums=(1,))
-        def block_fn(global_params, opt_states, server_state, key,
+        # Only the per-client optimizer buffers and the EF compression
+        # residual are donated: callers (and the seed tests)
+        # legitimately hold references to the previous global model
+        # across ``run`` calls. The server-aggregator state (momentum /
+        # moments / adaptive scores) and the residual ride in the scan
+        # carry so stateful strategies and compressed transport fuse
+        # exactly like stateless FedAvg.
+        @functools.partial(jax.jit, donate_argnums=(1, 2))
+        def block_fn(global_params, opt_states, resid, server_state, key,
                      eval_mask):
             def body(carry, do_eval):
-                g, opt_s, srv, k = carry
+                g, opt_s, r, srv, k = carry
                 k, k_round, k_eval = jax.random.split(k, 3)
-                g, opt_s, srv, losses = round_step(g, opt_s, srv, k_round)
+                g, opt_s, srv, r, losses = round_step(g, opt_s, srv, r,
+                                                      k_round)
                 scores = jax.lax.cond(
                     do_eval,
                     lambda gp, ke: eval_fn(gp, ke).astype(jnp.float32),
                     lambda gp, ke: jnp.zeros((num_eval,), jnp.float32),
                     g, k_eval)
-                return (g, opt_s, srv, k), (jnp.mean(losses), scores)
+                return (g, opt_s, r, srv, k), (jnp.mean(losses), scores)
 
-            ((global_params, opt_states, server_state, key),
+            ((global_params, opt_states, resid, server_state, key),
              (losses, scores)) = jax.lax.scan(
-                body, (global_params, opt_states, server_state, key),
+                body, (global_params, opt_states, resid, server_state, key),
                 eval_mask, unroll=fed_cfg.scan_unroll)
-            return (global_params, opt_states, server_state, key, losses,
-                    scores)
+            return (global_params, opt_states, resid, server_state, key,
+                    losses, scores)
 
         self._round = jax.jit(round_step)
         self._eval = jax.jit(eval_fn)
@@ -346,10 +385,10 @@ class FederatedGPO:
         for start in range(0, full_end, chunk):
             mask = eval_mask[start:start + chunk]
             try:
-                (self.global_params, self.opt_states, self.server_state,
-                 key, losses, scores) = self._block(
-                    self.global_params, self.opt_states, self.server_state,
-                    key, jnp.asarray(mask))
+                (self.global_params, self.opt_states, self.ef_resid,
+                 self.server_state, key, losses, scores) = self._block(
+                    self.global_params, self.opt_states, self.ef_resid,
+                    self.server_state, key, jnp.asarray(mask))
             except BaseException:
                 self._recover_donated_opt_states()
                 raise
@@ -372,8 +411,9 @@ class FederatedGPO:
         key (chain identical to one scan step)."""
         key, k_round, k_eval = jax.random.split(key, 3)
         (self.global_params, self.opt_states, self.server_state,
-         losses) = self._round(self.global_params, self.opt_states,
-                               self.server_state, k_round)
+         self.ef_resid, losses) = self._round(
+            self.global_params, self.opt_states, self.server_state,
+            self.ef_resid, k_round)
         hist.round_loss.append(float(jnp.mean(losses)))
         self._note_privacy(hist, 1)
         if eval_mask[r]:
@@ -386,7 +426,9 @@ class FederatedGPO:
         consumed; rebuild them from the still-valid global params so the
         trainer stays usable (Adam moments reset, training state kept).
         Buffers that were never actually donated (e.g. interrupt during
-        tracing, or a backend that ignores donation) are left alone."""
+        tracing, or a backend that ignores donation) are left alone.
+        The donated EF residual recovers to zeros the same way (error
+        feedback restarts; the global model is untouched)."""
         leaves = jax.tree.leaves(self.opt_states)
         deleted = any(getattr(x, "is_deleted", lambda: False)()
                       for x in leaves)
@@ -394,6 +436,9 @@ class FederatedGPO:
             per_client = broadcast_to_clients(self.global_params,
                                               len(self.train_groups))
             self.opt_states = jax.vmap(self.opt.init)(per_client)
+        if self.ef_resid is not None and getattr(
+                self.ef_resid, "is_deleted", lambda: False)():
+            self.ef_resid = jnp.zeros(self.ef_resid.shape, jnp.float32)
 
     def _run_loop(self, rounds: int, log_every: int) -> History:
         hist = History()
@@ -434,13 +479,29 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
     For ``adaptive``, effective per-group weights are formed OUTSIDE the
     shard_map from the replicated scores (they need a normalization over
     all clients), so the mapped body stays collective-minimal.
+
+    With ``FedConfig.compression`` enabled (DESIGN.md §10) each shard
+    compresses its own clients' (privatized) flat deltas LOCALLY, after
+    the DP release point: the linear family dequantizes shard-locally
+    and keeps its ONE weighted psum; the robust family all-gathers the
+    int8 payload + f32 per-client scales instead of f32 vectors (~4×
+    fewer bytes on the round's dominant collective; ``dryrun.py
+    --gpo-fed --compress int8`` prints the compiled byte counts). With
+    ``error_feedback`` the round gains a trailing sharded
+    ``resid (C_local, P)`` argument/result carrying the EF21 residual.
+    Rounding uniforms fold out of the per-client training ``keys`` (the
+    §9 noise-key scheme), so the round stays bit-reproducible against
+    the stacked engine given the same keys.
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
     gpo_cfg = fed_cfg.resolve_gpo(gpo_cfg)  # runtime attention override
     fed_cfg.privacy.validate()
+    fed_cfg.compression.validate()
     priv = fed_cfg.privacy
+    comp = fed_cfg.compression
+    ef = comp.enabled and comp.error_feedback
     opt = opt or adam(fed_cfg.lr)
     if agg is None:
         agg = make_aggregator(fed_cfg.agg, num_clients=fed_cfg.num_clients,
@@ -451,14 +512,51 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
     repl = P()
 
     def round_body(client_params, opt_states, keys, group_ids, weights,
-                   server_state):
+                   server_state, resid=None):
         # local shard: (C_local, ...) clients; train without collectives
         new_params, new_opt, losses = jax.vmap(local_train)(
             client_params, opt_states, keys, group_ids)
         # delta contract: entry params ARE the replicated global model
         deltas = tree_sub(new_params, client_params)
         global_prev = tree_index(client_params, 0)
-        if priv.enabled:
+        new_resid = None
+        if comp.enabled:
+            # compressed transport (DESIGN.md §10): release + codec are
+            # shard-local; what crosses the wire afterwards is either
+            # the already-decompressed weighted sum (linear: one psum,
+            # unchanged schedule) or the compressed payload itself
+            # (robust: int8 + scales all-gather — the byte win).
+            vecs = tree_ravel_clients(deltas)
+            if agg.linear:
+                local_vec, new_resid = cx.transport_delta_flat(
+                    vecs, weights, keys, priv, comp, agg, resid,
+                    use_pallas=fed_cfg.use_pallas_aggregation)
+                delta = tree_unflatten_from_vector(
+                    jax.lax.psum(local_vec, axes), global_prev)
+            else:
+                x = (dp.privatize_flat(vecs, keys, priv) if priv.enabled
+                     else vecs.astype(jnp.float32))
+                u = x + resid if ef else x
+                if comp.kind == "int8":
+                    uniform = (cx.client_uniform(keys, u.shape)
+                               if comp.stochastic else None)
+                    q, scales = cx.quantize_int8(u, uniform=uniform)
+                    t_local = cx.dequantize_int8(q, scales)
+                    all_q = jax.lax.all_gather(q, axes, axis=0,
+                                               tiled=True)
+                    all_s = jax.lax.all_gather(scales, axes, axis=0,
+                                               tiled=True)
+                    all_vecs = cx.dequantize_int8(all_q, all_s)
+                else:  # topk: dense f32 layout of the sparsified shard
+                    t_local, _ = cx.sparsify_topk(u, comp.topk_frac)
+                    all_vecs = jax.lax.all_gather(t_local, axes, axis=0,
+                                                  tiled=True)
+                new_resid = u - t_local if ef else None
+                all_w = jax.lax.all_gather(weights, axes, axis=0,
+                                           tiled=True)
+                delta = tree_unflatten_from_vector(
+                    agg.reduce_flat(all_vecs, all_w), global_prev)
+        elif priv.enabled:
             # DP release point (DESIGN.md §9): clip + noise the local
             # shard's flat deltas before ANY collective — per-client
             # norms are shard-local, so the psum/all-gather only ever
@@ -514,17 +612,28 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
         # redistribute: every client's next-round start is the global model
         c_local = keys.shape[0]
         client_params = broadcast_to_clients(global_params, c_local)
-        return client_params, new_opt, losses, server_state
+        return client_params, new_opt, losses, server_state, new_resid
 
-    in_specs = (spec, spec, spec, spec, spec, repl)
-    out_specs = (spec, spec, spec, repl)
-    sharded = shard_map(round_body, mesh=mesh, in_specs=in_specs,
+    if ef:
+        in_specs = (spec, spec, spec, spec, spec, repl, spec)
+        out_specs = (spec, spec, spec, repl, spec)
+        body = round_body
+    else:
+        in_specs = (spec, spec, spec, spec, spec, repl)
+        out_specs = (spec, spec, spec, repl)
+
+        def body(client_params, opt_states, keys, group_ids, weights,
+                 server_state):
+            return round_body(client_params, opt_states, keys, group_ids,
+                              weights, server_state)[:4]
+
+    sharded = shard_map(body, mesh=mesh, in_specs=in_specs,
                         out_specs=out_specs, check_rep=False)
 
     def round_fn(client_params, opt_states, keys, group_ids, weights,
-                 server_state):
+                 server_state, *maybe_resid):
         weights = agg.weigh(server_state, weights, None)
         return sharded(client_params, opt_states, keys, group_ids, weights,
-                       server_state)
+                       server_state, *maybe_resid)
 
     return round_fn

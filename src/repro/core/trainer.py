@@ -23,7 +23,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, PrivacyConfig
+from repro.configs.base import CompressionConfig, ModelConfig, PrivacyConfig
 from repro.core.aggregation import ServerAggregator
 from repro.core.fedavg import broadcast_to_clients, fedavg_stacked
 from repro.core.lora import apply_lora
@@ -142,7 +142,9 @@ def greedy_decode(cfg: ModelConfig, params, cache, first_token, start_pos,
 def _aggregated_round(local_train: Callable,
                       agg: Optional[ServerAggregator],
                       privacy: Optional[PrivacyConfig] = None,
-                      use_pallas_aggregation: bool = False) -> Callable:
+                      use_pallas_aggregation: bool = False,
+                      compression: Optional[CompressionConfig] = None
+                      ) -> Callable:
     """Shared round tail for the backbone/LoRA federated trainers.
 
     ``agg=None`` keeps the seed contract: (client_payload, opt_states,
@@ -157,13 +159,27 @@ def _aggregated_round(local_train: Callable,
     aggregator, exactly as in the GPO engines
     (``use_pallas_aggregation`` routes the linear family through the
     fused ``agg_clip_reduce`` kernel, mirroring the GPO engines' flag).
+    With an *enabled* ``compression`` config (DESIGN.md §10; requires
+    ``agg``) the released deltas run through the int8/top-k codec before
+    the aggregator; the round signature grows, in order, a trailing
+    ``resid (C, P)`` EF-residual argument/result when
+    ``error_feedback`` is on, then the per-round ``round_key`` whenever
+    privacy noise or stochastic rounding needs randomness:
+    (payload, opt_states, batches, weights, server_state[, resid]
+     [, round_key]) -> (payload, opt_states, losses, server_state
+     [, resid]).
     """
     if privacy is not None:
         privacy.validate()
+    if compression is not None:
+        compression.validate()
     private = privacy is not None and privacy.enabled
-    if private and agg is None:
-        raise ValueError("the DP delta pipeline rides the delta contract:"
-                         " pass a ServerAggregator (agg=) with privacy")
+    compressed = compression is not None and compression.enabled
+    if (private or compressed) and agg is None:
+        raise ValueError("the DP delta pipeline and the compression stage"
+                         " ride the delta contract: pass a"
+                         " ServerAggregator (agg=) with privacy or"
+                         " compression")
     if agg is None:
         def round_fn(client_payload, opt_states, batches, weights):
             client_payload, opt_states, losses = jax.vmap(local_train)(
@@ -199,6 +215,45 @@ def _aggregated_round(local_train: Callable,
         num_clients = weights.shape[0]
         return (broadcast_to_clients(global_payload, num_clients),
                 opt_states, losses, server_state)
+
+    if compressed:
+        from repro.core import compression as cx
+        from repro.configs.base import PrivacyConfig as _PC
+
+        priv = privacy if privacy is not None else _PC()
+        ef = compression.error_feedback
+        need_key = private or compression.needs_rng
+
+        def round_fn(client_payload, opt_states, batches, weights,
+                     server_state, *extra):
+            expect = int(ef) + int(need_key)
+            if len(extra) != expect:
+                raise TypeError(
+                    f"compressed round expects {expect} trailing arg(s) "
+                    f"([resid]={ef}, [round_key]={need_key}); "
+                    f"got {len(extra)}")
+            resid = extra[0] if ef else None
+            round_key = extra[-1] if need_key else None
+            new_payload, opt_states, losses = jax.vmap(local_train)(
+                client_payload, opt_states, batches)
+            # compressed transport (DESIGN.md §10): DP release first (ε
+            # is a property of the release; the codec is
+            # post-processing), then EF + codec, then the reduction.
+            deltas = tree_sub(new_payload, client_payload)
+            keys = (jax.random.split(round_key, weights.shape[0])
+                    if need_key else None)
+            w_eff = agg.weigh(server_state, weights, None)
+            delta_vec, new_resid = cx.transport_delta_flat(
+                tree_ravel_clients(deltas), w_eff, keys, priv,
+                compression, agg, resid,
+                use_pallas=use_pallas_aggregation)
+            delta = tree_unflatten_from_vector(
+                delta_vec, tree_index(client_payload, 0))
+            out = _finish(new_payload, client_payload, opt_states, losses,
+                          weights, server_state, delta_override=delta)
+            return out + (new_resid,) if ef else out
+
+        return round_fn
 
     if private:
         from repro.core import privacy as dp
@@ -238,8 +293,9 @@ def make_backbone_fedavg_round(cfg: ModelConfig, opt: Optimizer,
                                local_steps: int,
                                agg: Optional[ServerAggregator] = None,
                                privacy: Optional[PrivacyConfig] = None,
-                               use_pallas_aggregation: bool = False
-                               ) -> Callable:
+                               use_pallas_aggregation: bool = False,
+                               compression: Optional[CompressionConfig]
+                               = None) -> Callable:
     """Full-parameter federated round over backbones (feasible <= few-B
     params).
 
@@ -264,14 +320,16 @@ def make_backbone_fedavg_round(cfg: ModelConfig, opt: Optimizer,
         return params, opt_state, jnp.mean(losses)
 
     return _aggregated_round(local_train, agg, privacy,
-                             use_pallas_aggregation)
+                             use_pallas_aggregation, compression)
 
 
 def make_fedlora_round(cfg: ModelConfig, frozen_params, opt: Optimizer,
                        local_steps: int,
                        agg: Optional[ServerAggregator] = None,
                        privacy: Optional[PrivacyConfig] = None,
-                       use_pallas_aggregation: bool = False) -> Callable:
+                       use_pallas_aggregation: bool = False,
+                       compression: Optional[CompressionConfig] = None
+                       ) -> Callable:
     """Federated LoRA adapters with a frozen (shared) backbone — the
     production recipe for grok-1-class archs (DESIGN.md §3). The adapter
     tree is a plain pytree, so every registry aggregation strategy
@@ -293,4 +351,4 @@ def make_fedlora_round(cfg: ModelConfig, frozen_params, opt: Optimizer,
         return lora, opt_state, jnp.mean(losses)
 
     return _aggregated_round(local_train, agg, privacy,
-                             use_pallas_aggregation)
+                             use_pallas_aggregation, compression)

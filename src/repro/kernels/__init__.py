@@ -2,10 +2,19 @@
 # GPO neural-process attention (the paper's module; differentiable via a
 # flash-style custom VJP on the banded grid, DESIGN.md §8), Mamba2 SSD
 # scan, and the server-aggregation reductions (Eq. 3 FedAvg plus the
-# generalized delta-moment and rank-trim kernels, DESIGN.md §7).
+# generalized delta-moment, rank-trim, DP-clip, and compressed-transport
+# kernels, DESIGN.md §7, §9, §10).
+# Load the deprecated re-export module FIRST so its one-time parent-
+# attribute binding happens now; the ops import below then rebinds the
+# ``fedavg_reduce`` package attribute to the jit'd wrapper FUNCTION (the
+# public API), and later `import repro.kernels.fedavg_reduce` hits
+# sys.modules without re-shadowing it.
+from repro.kernels import fedavg_reduce as _fedavg_reduce_module  # noqa: F401,E501
 from repro.kernels.ops import (  # noqa: F401
     agg_clip_reduce,
     agg_momentum_reduce,
+    agg_quant_clip_reduce,
+    agg_topk_reduce,
     agg_trimmed_reduce,
     fedavg_reduce,
     fedavg_reduce_tree,

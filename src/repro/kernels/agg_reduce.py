@@ -1,7 +1,10 @@
-"""Generalized server-aggregation Pallas kernels (DESIGN.md §7).
+"""Generalized server-aggregation Pallas kernels (DESIGN.md §7, §9, §10).
 
+One kernel family, one oracle module (kernels/ref.py): the seed's
 ``fedavg_reduce`` (Eq. 3 as a weighted reduction over the flattened
-(C, P) client-delta matrix) generalizes into two kernels:
+(C, P) client-delta matrix — ``fedavg_reduce_flat`` below, formerly its
+own ``kernels/fedavg_reduce.py``, kept there as a deprecation
+re-export) generalizes into the aggregation kernels:
 
 1. ``momentum_reduce_flat`` — the weighted delta-moment kernel: one pass
    over the (C, bp) tile produces BOTH the weighted first moment
@@ -36,6 +39,27 @@
    unfused chain's three delta reads plus a full (C, P)
    materialization of the clipped matrix.
 
+4. ``quant_clip_reduce_flat`` — the communication-compression kernel
+   (DESIGN.md §10): extends the clip/noise two-sweep grid with an int8
+   quantize→dequantize stage. The per-client quantization scale needs
+   max|d̃_c| over the FULL parameter axis — a second global reduction on
+   top of the clip norm — so the grid grows to (3, nb) when the DP clip
+   is on ((2, nb) otherwise): sweep 0 accumulates squared norms, sweep 1
+   recomputes the privatized tile on the fly and accumulates per-client
+   absmax into a second (C, 1) scratch, sweep 2 quantizes (stochastic
+   rounding from a presampled uniform tile), dequantizes, and
+   weighted-reduces. No intermediate clipped/quantized (C, P) matrix
+   ever reaches HBM; with error feedback the kernel's only (C, P) write
+   is the NEW residual e' = d̃ + e − Q(d̃ + e), which is carried round
+   state, not an intermediate.
+
+5. ``topk_reduce_flat`` — the top-k threshold/scatter kernel: given
+   per-client magnitude thresholds (the k-th largest |d̃_c[p]|,
+   computed outside — exact selection is a global sort and does not
+   stream), one (nb,) sweep masks sub-threshold entries to zero,
+   weighted-reduces the survivors, and (under error feedback) writes
+   the masked-out remainder as the new residual.
+
 All kernels share the tiling of ``fedavg_reduce``: the grid walks the
 flattened parameter axis, weights sit in an SMEM-resident (C, 1) tile,
 and each tile streams HBM once per sweep.
@@ -57,6 +81,12 @@ DEFAULT_BLOCK = 2048
 # keep scale 1 instead of dividing by zero
 _NORM_FLOOR = 1e-12
 
+# int8 symmetric-quantization constants, shared with core/compression.py
+# and kernels/ref.py: q in [-127, 127], scale floored so an all-zero
+# client quantizes to exact zeros instead of dividing by zero
+INT8_LEVELS = 127.0
+_SCALE_FLOOR = 1e-30
+
 
 def _pad_cols(x: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
     p = x.shape[-1]
@@ -65,6 +95,45 @@ def _pad_cols(x: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
         widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
         x = jnp.pad(x, widths)
     return x, p + pad
+
+
+def _fedavg_kernel(w_ref, x_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)  # (C, 1)
+    x = x_ref[...].astype(jnp.float32)  # (C, bp)
+    o_ref[...] = jnp.sum(w * x, axis=0, keepdims=True).astype(o_ref.dtype)
+
+
+def fedavg_reduce_flat(stacked: jnp.ndarray, weights: jnp.ndarray, *,
+                       block: int = DEFAULT_BLOCK,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """stacked (C, P), weights (C,) -> (P,). P is padded to ``block``.
+
+    Eq. 3 as a fused weighted reduction: each tile streams (C, bp)
+    client parameters HBM -> VMEM once and writes (1, bp) back, so the
+    kernel runs at HBM speed, which is the roofline for aggregation.
+    ``interpret`` defaults to the backend (interpret on CPU, native on
+    TPU), matching the ``ops.py`` wrappers, so direct callers never
+    silently run interpret mode on hardware.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    c, p = stacked.shape
+    stacked, pp = _pad_cols(stacked, block)
+    nb = pp // block
+    w2 = weights.reshape(c, 1).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        _fedavg_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((c, 1), lambda i: (0, 0)),
+            pl.BlockSpec((c, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, pp), stacked.dtype),
+        interpret=interpret,
+    )(w2, stacked)
+    return out[0, :p]
 
 
 def _moment_kernel(beta, w_ref, x_ref, m_ref, d_ref, nm_ref):
@@ -190,6 +259,217 @@ def clip_reduce_flat(stacked: jnp.ndarray, weights: jnp.ndarray, *,
         interpret=interpret,
     )(*operands)
     return out[0, :p]
+
+
+def _quant_clip_reduce_kernel(clip, has_noise, has_resid, has_uniform,
+                              w_ref, x_ref, *rest):
+    """Multi-sweep quantized-transport body (DESIGN.md §10).
+
+    Sweeps (clip > 0 adds the leading norm sweep):
+      [norm]  sq_c   += Σ_p x²           (the DP clip needs ‖x_c‖₂)
+      absmax  amax_c  = max(amax_c, max_p |d̃_c|)   d̃ recomputed on the fly
+      quant   t = dequant(Q(d̃)); out += Σ_c w_c t; resid' = d̃ − t
+
+    Operand layout in ``rest`` (presence is static):
+      [noise] [resid] [uniform] out [resid'] scratch: [sq] amax
+    """
+    rest = list(rest)
+    n_ref = rest.pop(0) if has_noise else None
+    r_ref = rest.pop(0) if has_resid else None
+    u_ref = rest.pop(0) if has_uniform else None
+    o_ref = rest.pop(0)
+    er_ref = rest.pop(0) if has_resid else None
+    sq_ref = rest.pop(0) if clip > 0.0 else None
+    amax_ref = rest.pop(0)
+
+    nph = 3 if clip > 0.0 else 2
+    ph = pl.program_id(0)
+    i = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)  # (C, bp)
+
+    @pl.when((ph == nph - 2) & (i == 0))
+    def _init_amax():
+        amax_ref[...] = jnp.zeros_like(amax_ref)
+
+    if clip > 0.0:
+        @pl.when((ph == 0) & (i == 0))
+        def _init_norms():
+            sq_ref[...] = jnp.zeros_like(sq_ref)
+
+        @pl.when(ph == 0)
+        def _accumulate_norms():
+            sq_ref[...] += jnp.sum(x * x, axis=1, keepdims=True)
+
+    def released():
+        """The codec input d̃ for this tile: DP release (clip + noise)
+        then the EF residual add — recomputed per sweep so no (C, P)
+        intermediate ever reaches HBM."""
+        y = x
+        if clip > 0.0:
+            norm = jnp.sqrt(sq_ref[...])  # (C, 1)
+            y = y * jnp.minimum(1.0, clip / jnp.maximum(norm, _NORM_FLOOR))
+            if has_noise:
+                y = y + n_ref[...].astype(jnp.float32)
+        if has_resid:
+            y = y + r_ref[...].astype(jnp.float32)
+        return y
+
+    @pl.when(ph == nph - 2)
+    def _accumulate_absmax():
+        y = released()
+        amax_ref[...] = jnp.maximum(
+            amax_ref[...], jnp.max(jnp.abs(y), axis=1, keepdims=True))
+
+    @pl.when(ph == nph - 1)
+    def _quantize_and_reduce():
+        w = w_ref[...].astype(jnp.float32)  # (C, 1)
+        y = released()
+        s = jnp.maximum(amax_ref[...] / INT8_LEVELS, _SCALE_FLOOR)
+        z = y / s
+        if has_uniform:  # stochastic rounding from the presampled tile
+            q = jnp.floor(z + u_ref[...].astype(jnp.float32))
+        else:
+            q = jnp.round(z)
+        t = jnp.clip(q, -INT8_LEVELS, INT8_LEVELS) * s
+        o_ref[...] = jnp.sum(w * t, axis=0, keepdims=True).astype(
+            o_ref.dtype)
+        if has_resid:
+            er_ref[...] = (y - t).astype(er_ref.dtype)
+
+
+def quant_clip_reduce_flat(stacked: jnp.ndarray, weights: jnp.ndarray, *,
+                           clip: float = 0.0,
+                           noise: jnp.ndarray | None = None,
+                           uniform: jnp.ndarray | None = None,
+                           resid: jnp.ndarray | None = None,
+                           block: int = DEFAULT_BLOCK,
+                           interpret: bool | None = None
+                           ) -> tuple[jnp.ndarray, jnp.ndarray | None]:
+    """Fused DP-release + int8 quantized transport + weighted reduce.
+
+    stacked (C, P) raw deltas, weights (C,), optional presampled
+    σ-scaled noise (C, P), optional presampled U[0,1) rounding tile
+    (C, P), optional EF residual (C, P) ->
+    (Σ_c w_c · dequant(Q(d̃_c)) of shape (P,), new residual or None)
+    where d̃_c = clip/noise release of d_c plus the carried residual.
+    One launch; (3, nb) grid with the clip on, (2, nb) otherwise
+    (DESIGN.md §10).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    if noise is not None and clip <= 0.0:
+        raise ValueError("noise requires clip > 0 (the DP release scales "
+                         "noise by the clip bound; see PrivacyConfig)")
+    c, p = stacked.shape
+    stacked, pp = _pad_cols(stacked, block)
+    nb = pp // block
+    nph = 3 if clip > 0.0 else 2
+    w2 = weights.reshape(c, 1).astype(jnp.float32)
+
+    in_specs = [
+        pl.BlockSpec((c, 1), lambda ph, i: (0, 0)),
+        pl.BlockSpec((c, block), lambda ph, i: (0, i)),
+    ]
+    operands = [w2, stacked]
+    # operands not consumed by every sweep pin to block 0 on the sweeps
+    # that skip them, so each streams HBM only when read:
+    #   noise/resid — the absmax + quantize sweeps (the last two);
+    #   uniform     — the quantize sweep only.
+    last_two = lambda ph, i: (0, ((ph + 1) // 2) * i)  # noqa: E731
+    last_one = lambda ph, i: (0, (ph // (nph - 1)) * i)  # noqa: E731
+    if noise is not None:
+        operands.append(_pad_cols(noise, block)[0])
+        in_specs.append(pl.BlockSpec((c, block), last_two))
+    if resid is not None:
+        operands.append(_pad_cols(resid.astype(jnp.float32), block)[0])
+        in_specs.append(pl.BlockSpec(
+            (c, block), last_two if nph == 3 else (lambda ph, i: (0, i))))
+    if uniform is not None:
+        operands.append(_pad_cols(uniform, block)[0])
+        in_specs.append(pl.BlockSpec((c, block), last_one))
+
+    out_specs = [pl.BlockSpec((1, block), lambda ph, i: (0, i))]
+    out_shape = [jax.ShapeDtypeStruct((1, pp), jnp.float32)]
+    if resid is not None:
+        out_specs.append(pl.BlockSpec((c, block), lambda ph, i: (0, i)))
+        out_shape.append(jax.ShapeDtypeStruct((c, pp), jnp.float32))
+
+    scratch = []
+    if clip > 0.0:
+        scratch.append(pltpu.VMEM((c, 1), jnp.float32))
+    scratch.append(pltpu.VMEM((c, 1), jnp.float32))
+
+    kernel = functools.partial(
+        _quant_clip_reduce_kernel, clip, noise is not None,
+        resid is not None, uniform is not None)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(nph, nb),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*operands)
+    if resid is not None:
+        return outs[0][0, :p], outs[1][:, :p]
+    return outs[0][0, :p], None
+
+
+def _topk_kernel(has_resid, w_ref, x_ref, t_ref, o_ref, *maybe_er):
+    x = x_ref[...].astype(jnp.float32)  # (C, bp)
+    w = w_ref[...].astype(jnp.float32)  # (C, 1)
+    tau = t_ref[...].astype(jnp.float32)  # (C, 1)
+    t = jnp.where(jnp.abs(x) >= tau, x, 0.0)
+    o_ref[...] = jnp.sum(w * t, axis=0, keepdims=True).astype(o_ref.dtype)
+    if has_resid:
+        maybe_er[0][...] = (x - t).astype(maybe_er[0].dtype)
+
+
+def topk_reduce_flat(stacked: jnp.ndarray, weights: jnp.ndarray,
+                     thresholds: jnp.ndarray, *, with_residual: bool = False,
+                     block: int = DEFAULT_BLOCK,
+                     interpret: bool | None = None
+                     ) -> tuple[jnp.ndarray, jnp.ndarray | None]:
+    """Top-k threshold/scatter + weighted reduce (DESIGN.md §10).
+
+    stacked (C, P) codec inputs d̃ (already released + EF-accumulated),
+    weights (C,), thresholds (C,) — the k-th largest |d̃_c| per client —
+    -> (Σ_c w_c · t_c of shape (P,), d̃ − t or None) with
+    t_c = d̃_c masked where |d̃_c| < τ_c (threshold ties are kept). One
+    (nb,) sweep; padded columns are zeros and survive any τ ≥ 0 with
+    value 0, so they never perturb the reduce.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    c, p = stacked.shape
+    stacked, pp = _pad_cols(stacked.astype(jnp.float32), block)
+    nb = pp // block
+    w2 = weights.reshape(c, 1).astype(jnp.float32)
+    t2 = thresholds.reshape(c, 1).astype(jnp.float32)
+
+    out_specs = [pl.BlockSpec((1, block), lambda i: (0, i))]
+    out_shape = [jax.ShapeDtypeStruct((1, pp), jnp.float32)]
+    if with_residual:
+        out_specs.append(pl.BlockSpec((c, block), lambda i: (0, i)))
+        out_shape.append(jax.ShapeDtypeStruct((c, pp), jnp.float32))
+
+    outs = pl.pallas_call(
+        functools.partial(_topk_kernel, with_residual),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((c, 1), lambda i: (0, 0)),
+            pl.BlockSpec((c, block), lambda i: (0, i)),
+            pl.BlockSpec((c, 1), lambda i: (0, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[],
+        interpret=interpret,
+    )(w2, stacked, t2)
+    if with_residual:
+        return outs[0][0, :p], outs[1][:, :p]
+    return outs[0][0, :p], None
 
 
 def _trim_kernel(k, w_ref, x_ref, o_ref):

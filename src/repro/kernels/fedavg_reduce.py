@@ -1,60 +1,14 @@
-"""FedAvg weighted-reduction Pallas kernel — Eq. 3 as a fused kernel.
-
-theta^{t+1}[p] = sum_c w[c] * theta_c[p], tiled over the flattened
-parameter axis. Bandwidth-bound by design: each tile streams (C, bp)
-client parameters HBM -> VMEM once and writes (1, bp) back — arithmetic
-intensity C MACs / (C+1) elements, i.e. the kernel runs at HBM speed,
-which is the roofline for aggregation. On hardware this is the epilogue
-fused after the cross-client reduce-scatter (DESIGN.md §4); weights sit
-in SMEM-resident (C, 1) tiles.
+"""DEPRECATED module: folded into ``repro.kernels.agg_reduce`` so the
+server-aggregation kernels live as one family with one oracle module
+(kernels/ref.py). Import ``fedavg_reduce_flat`` from
+``repro.kernels.agg_reduce`` (or use the jit'd ``fedavg_reduce`` wrapper
+from ``repro.kernels``); this re-export keeps
+``from repro.kernels import fedavg_reduce`` and direct imports of this
+module working.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
-from repro.kernels.backend import interpret_default
-
-DEFAULT_BLOCK = 2048
-
-
-def _fedavg_kernel(w_ref, x_ref, o_ref):
-    w = w_ref[...].astype(jnp.float32)  # (C, 1)
-    x = x_ref[...].astype(jnp.float32)  # (C, bp)
-    o_ref[...] = jnp.sum(w * x, axis=0, keepdims=True).astype(o_ref.dtype)
-
-
-def fedavg_reduce_flat(stacked: jnp.ndarray, weights: jnp.ndarray, *,
-                       block: int = DEFAULT_BLOCK,
-                       interpret: bool | None = None) -> jnp.ndarray:
-    """stacked (C, P), weights (C,) -> (P,). P is padded to ``block``.
-
-    ``interpret`` defaults to the backend (interpret on CPU, native on
-    TPU), matching the ``ops.py`` wrappers, so direct callers never
-    silently run interpret mode on hardware.
-    """
-    if interpret is None:
-        interpret = interpret_default()
-    c, p = stacked.shape
-    pad = (-p) % block
-    if pad:
-        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
-    pp = p + pad
-    nb = pp // block
-    w2 = weights.reshape(c, 1).astype(jnp.float32)
-
-    out = pl.pallas_call(
-        _fedavg_kernel,
-        grid=(nb,),
-        in_specs=[
-            pl.BlockSpec((c, 1), lambda i: (0, 0)),
-            pl.BlockSpec((c, block), lambda i: (0, i)),
-        ],
-        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, pp), stacked.dtype),
-        interpret=interpret,
-    )(w2, stacked)
-    return out[0, :p]
+from repro.kernels.agg_reduce import (  # noqa: F401
+    DEFAULT_BLOCK,
+    fedavg_reduce_flat,
+)

@@ -13,11 +13,13 @@ import jax.numpy as jnp
 
 from repro.kernels.agg_reduce import (
     clip_reduce_flat,
+    fedavg_reduce_flat,
     momentum_reduce_flat,
+    quant_clip_reduce_flat,
+    topk_reduce_flat,
     trimmed_reduce_flat,
 )
 from repro.kernels.backend import interpret_default as _interpret_default
-from repro.kernels.fedavg_reduce import fedavg_reduce_flat
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.gpo_attention import gpo_attention_hsd
 from repro.kernels.ssd_scan import ssd_scan_bhsp
@@ -147,6 +149,40 @@ def agg_clip_reduce(stacked, weights, *, clip: float, noise=None,
         interpret = _interpret_default()
     return clip_reduce_flat(stacked, weights, clip=clip, noise=noise,
                             block=block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("clip", "block", "interpret"))
+def agg_quant_clip_reduce(stacked, weights, *, clip: float = 0.0,
+                          noise=None, uniform=None, resid=None,
+                          block: int = 2048,
+                          interpret: bool | None = None):
+    """stacked (C, P) raw client deltas, weights (C,), optional
+    presampled σ-scaled noise (C, P), optional presampled U[0,1)
+    stochastic-rounding tile (C, P), optional EF residual (C, P) ->
+    (reduced (P,), new residual (C, P) | None): the fused DP-release +
+    int8 quantized-transport + weighted-reduce kernel (DESIGN.md §10).
+    ``clip=0`` skips the DP stage (a distinct, shorter-grid trace);
+    ``uniform=None`` rounds to nearest."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return quant_clip_reduce_flat(stacked, weights, clip=clip, noise=noise,
+                                  uniform=uniform, resid=resid, block=block,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("with_residual", "block",
+                                             "interpret"))
+def agg_topk_reduce(stacked, weights, thresholds, *,
+                    with_residual: bool = False, block: int = 2048,
+                    interpret: bool | None = None):
+    """stacked (C, P) codec inputs, weights (C,), per-client magnitude
+    thresholds (C,) -> (reduced (P,), residual (C, P) | None): the
+    top-k threshold/scatter + weighted-reduce kernel (DESIGN.md §10)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return topk_reduce_flat(stacked, weights, thresholds,
+                            with_residual=with_residual, block=block,
+                            interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("trim", "block", "interpret"))

@@ -126,6 +126,49 @@ def ref_clip_reduce(stacked, weights, *, clip, noise=None):
     return jnp.einsum("c,cp->p", weights.astype(jnp.float32), y)
 
 
+def ref_quant_clip_reduce(stacked, weights, *, clip=0.0, noise=None,
+                          uniform=None, resid=None):
+    """Fused quantized-transport oracle written out stage by stage
+    (DESIGN.md §10): DP release (clip to the bound, add presampled
+    noise), EF residual add, per-client symmetric int8 quantization
+    (scale = absmax/127 floored at 1e-30 so zero rows stay zero;
+    stochastic rounding q = ⌊z + u⌋ from the presampled uniform tile,
+    round-to-nearest without it), dequantize, weighted sum. Returns
+    (reduced (P,), new residual (C, P) | None). The 1e-12 norm floor and
+    the 127-level symmetric grid match the kernel by shared constant."""
+    x = stacked.astype(jnp.float32)
+    if clip > 0.0:
+        norms = jnp.sqrt(jnp.sum(jnp.square(x), axis=1))
+        x = x * jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12))[:, None]
+        if noise is not None:
+            x = x + noise.astype(jnp.float32)
+    if resid is not None:
+        x = x + resid.astype(jnp.float32)
+    scales = jnp.maximum(jnp.max(jnp.abs(x), axis=1) / 127.0, 1e-30)
+    z = x / scales[:, None]
+    q = (jnp.floor(z + uniform.astype(jnp.float32)) if uniform is not None
+         else jnp.round(z))
+    t = jnp.clip(q, -127.0, 127.0) * scales[:, None]
+    out = jnp.einsum("c,cp->p", weights.astype(jnp.float32), t)
+    return out, (x - t if resid is not None else None)
+
+
+def ref_topk_reduce(stacked, weights, *, frac):
+    """Top-k transport oracle: per client keep the entries whose
+    magnitude reaches the ⌈frac·P⌉-th largest |value| (threshold ties
+    kept), zero the rest, weighted-sum the survivors. Returns
+    (reduced (P,), masked-out remainder (C, P)) — the remainder is the
+    EF residual."""
+    x = stacked.astype(jnp.float32)
+    c, p = x.shape
+    k = max(1, int(np.ceil(frac * p)))
+    mags = np.abs(np.asarray(x))
+    tau = np.sort(mags, axis=1)[:, p - k]  # k-th largest per client
+    t = jnp.where(jnp.abs(x) >= jnp.asarray(tau)[:, None], x, 0.0)
+    out = jnp.einsum("c,cp->p", weights.astype(jnp.float32), t)
+    return out, x - t
+
+
 def ref_trimmed_flat(stacked, weights, *, trim):
     """Rank-trimmed weighted mean via an explicit stable argsort: sort
     each coordinate's clients (ties by client index), drop ``trim`` at

@@ -173,6 +173,8 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
                     use_pallas_attention: bool = False,
                     clip_norm: float = 0.0,
                     noise_multiplier: float = 0.0,
+                    compress: str = "none",
+                    topk_frac: float = 0.01,
                     verbose: bool = True) -> dict:
     """Compile the shard_map federated GPO round for one aggregation
     strategy on a ``clients``-device 'data' mesh and report its
@@ -186,15 +188,24 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
     (DESIGN.md §9): clip + noise happen shard-locally BEFORE the
     collectives, so the schedule must keep the exact same shape — one
     psum of the (already privatized) weighted delta for the linear
-    family, an all-gather of the privatized matrix for the robust one."""
+    family, an all-gather of the privatized matrix for the robust one.
+    ``compress`` compiles the delta codec (DESIGN.md §10): for the
+    robust family under ``int8`` the flat-delta all-gather turns into
+    an int8-payload + f32-scale all-gather (~4x fewer bytes — the
+    reported byte counts, parsed both flat from the HLO text and
+    trip-count-aware via ``launch/hlo_cost.py``, prove it); the linear
+    family dequantizes shard-locally and keeps its one f32 psum."""
     from jax.sharding import NamedSharding
-    from repro.configs import AggConfig, FedConfig, GPOConfig, PrivacyConfig
+    from repro.configs import (AggConfig, CompressionConfig, FedConfig,
+                               GPOConfig, PrivacyConfig)
     from repro.core import make_aggregator
     from repro.core.federated import make_sharded_round
     from repro.core.gpo import init_gpo_params
     from repro.data import SurveyConfig, make_survey_data
+    from repro.launch import hlo_cost
     from repro.launch.sharding import server_state_shardings
     from repro.optim import adam
+    from repro.utils.pytree import tree_count_params
 
     mesh = jax.make_mesh((clients,), ("data",))
     data = make_survey_data(SurveyConfig(num_groups=clients,
@@ -204,11 +215,12 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
                      d_ff=32)
     privacy = PrivacyConfig(clip_norm=clip_norm,
                             noise_multiplier=noise_multiplier)
+    compression = CompressionConfig(kind=compress, topk_frac=topk_frac)
     fcfg = FedConfig(num_clients=clients, local_epochs=2, num_context=6,
                      num_target=6, agg=AggConfig(name=agg_name),
                      use_pallas_aggregation=use_pallas,
                      use_pallas_attention=use_pallas_attention,
-                     privacy=privacy)
+                     privacy=privacy, compression=compression)
     opt = adam(fcfg.lr)
     agg = make_aggregator(fcfg.agg, num_clients=clients,
                           use_pallas=use_pallas)
@@ -229,11 +241,20 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
         lambda x, s: jax.ShapeDtypeStruct(tuple(x.shape), x.dtype,
                                           sharding=s),
         server_state, server_state_shardings(server_state, mesh))
+    args = (cp, opt_s, keys, gids, w, srv)
+    if compression.enabled and compression.error_feedback:
+        args += (jax.ShapeDtypeStruct(
+            (clients, tree_count_params(params)), jnp.float32,
+            sharding=spec),)
 
     t0 = time.time()
-    lowered = jax.jit(round_fn).lower(cp, opt_s, keys, gids, w, srv)
+    lowered = jax.jit(round_fn).lower(*args)
     compiled = lowered.compile()
-    coll = rl.parse_collectives(compiled.as_text())
+    hlo = compiled.as_text()
+    coll = rl.parse_collectives(hlo)
+    # trip-count-aware cross-check: collectives inside while loops count
+    # once per iteration in hlo_cost's walk (DESIGN.md §6)
+    cost_coll = hlo_cost.analyze_hlo(hlo).collective_bytes
     result = {
         "agg": agg_name,
         "clients": clients,
@@ -242,16 +263,24 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
         "private": privacy.enabled,
         "clip_norm": clip_norm,
         "noise_multiplier": noise_multiplier,
+        "compress": compress,
+        "topk_frac": topk_frac if compress == "topk" else None,
         "linear": agg.linear,
         "compile_s": round(time.time() - t0, 1),
         "collective_bytes_by_kind": dict(coll.bytes_by_kind),
         "collective_count_by_kind": dict(coll.count_by_kind),
         "collective_count": coll.total_count,
+        "hlo_cost_collective_bytes_by_kind": {
+            k: float(v) for k, v in cost_coll.items()},
         "memory": _mem_stats(compiled.memory_analysis()),
     }
     if verbose:
-        print(f"== gpo-fed round x agg={agg_name} mesh={clients} ==")
+        print(f"== gpo-fed round x agg={agg_name} mesh={clients}"
+              + (f" compress={compress}" if compress != "none" else "")
+              + " ==")
         print("collectives:", result["collective_bytes_by_kind"])
+        print("collectives (hlo_cost, trip-aware):",
+              result["hlo_cost_collective_bytes_by_kind"])
     return result
 
 
@@ -278,12 +307,23 @@ def main() -> None:
                     help="per-client L2 clip for --private")
     ap.add_argument("--noise-multiplier", type=float, default=1.0,
                     help="Gaussian noise multiplier for --private")
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "int8", "topk"],
+                    help="compile the --gpo-fed round with the delta "
+                         "codec (DESIGN.md §10): robust strategies "
+                         "all-gather int8 payloads + f32 scales instead "
+                         "of f32 vectors")
+    ap.add_argument("--topk-frac", type=float, default=0.01,
+                    help="fraction of coordinates kept for "
+                         "--compress topk")
     ap.add_argument("--out", default=None, help="append result as json line")
     args = ap.parse_args()
     if not args.gpo_fed and not (args.arch and args.shape):
         ap.error("--arch and --shape are required unless --gpo-fed")
     what = (f"gpo-fed x {args.agg} clients={args.clients}"
-            + (" private" if args.private else "") if args.gpo_fed
+            + (" private" if args.private else "")
+            + (f" compress={args.compress}" if args.compress != "none"
+               else "") if args.gpo_fed
             else f"{args.arch} x {args.shape} multi_pod={args.multi_pod}")
     try:
         if args.gpo_fed:
@@ -292,7 +332,8 @@ def main() -> None:
                 use_pallas_attention=args.pallas_attn,
                 clip_norm=args.clip_norm if args.private else 0.0,
                 noise_multiplier=(args.noise_multiplier if args.private
-                                  else 0.0))
+                                  else 0.0),
+                compress=args.compress, topk_frac=args.topk_frac)
         else:
             result = lower_pair(args.arch, args.shape,
                                 multi_pod=args.multi_pod)

@@ -14,10 +14,13 @@ Three trainer modes, all runnable on CPU with --smoke (reduced configs):
 
 All federated trainers take ``--agg`` (plus the matching hyperparameter
 flags) to select the server-aggregation strategy from the registry in
-``repro.core.aggregation`` (DESIGN.md §7), and ``--clip-norm`` /
+``repro.core.aggregation`` (DESIGN.md §7), ``--clip-norm`` /
 ``--noise-multiplier`` / ``--dp-delta`` to run the differentially-
 private client-delta pipeline (DESIGN.md §9; per-round ε is reported
-from the Rényi accountant).
+from the Rényi accountant), and ``--compress`` / ``--topk-frac`` /
+``--no-error-feedback`` to compress the client→server deltas (int8
+stochastic quantization or top-k sparsification with an EF21 residual,
+DESIGN.md §10 — applied AFTER the DP release, so ε is unchanged).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
@@ -26,6 +29,8 @@ Examples:
       --agg adaptive
   PYTHONPATH=src python -m repro.launch.train --trainer gpo --rounds 50 \
       --clip-norm 0.5 --noise-multiplier 0.8
+  PYTHONPATH=src python -m repro.launch.train --trainer gpo --rounds 50 \
+      --compress int8
 """
 from __future__ import annotations
 
@@ -39,6 +44,7 @@ import numpy as np
 from repro.checkpoint import save_checkpoint
 from repro.configs import (
     AggConfig,
+    CompressionConfig,
     FedConfig,
     GPOConfig,
     INPUT_SHAPES,
@@ -62,6 +68,7 @@ from repro.data import LMDataConfig, make_survey_data, SurveyConfig, split_group
 from repro.data.lm_data import synthetic_lm_batches
 from repro.models import init_params
 from repro.optim import adam
+from repro.utils.pytree import tree_count_params
 
 
 def _stack_client_batches(it, clients: int, steps: int):
@@ -107,6 +114,17 @@ def main() -> None:
                     help="Gaussian noise std = z * clip-norm per client")
     ap.add_argument("--dp-delta", type=float, default=1e-5,
                     help="target delta for the Renyi accountant's eps")
+    # client->server delta compression (DESIGN.md §10); applies to every
+    # federated trainer. --compress none (default) disables it.
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "int8", "topk"],
+                    help="delta codec: int8 stochastic quantization or "
+                         "top-k magnitude sparsification")
+    ap.add_argument("--topk-frac", type=float, default=0.01,
+                    help="fraction of coordinates kept per client "
+                         "(--compress topk)")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="disable the EF21 error-feedback residual")
     args = ap.parse_args()
 
     agg_cfg = AggConfig(name=args.agg, server_lr=args.server_lr,
@@ -117,13 +135,18 @@ def main() -> None:
                              noise_multiplier=args.noise_multiplier,
                              target_delta=args.dp_delta)
     priv_cfg.validate()
+    comp_cfg = CompressionConfig(kind=args.compress,
+                                 topk_frac=args.topk_frac,
+                                 error_feedback=not args.no_error_feedback)
+    comp_cfg.validate()
 
     if args.trainer == "gpo":
         data = make_survey_data(SurveyConfig(seed=args.seed))
         tr, ev = split_groups(data, seed=args.seed)
         gcfg = GPOConfig(d_embed=data.phi.shape[-1])
         fcfg = FedConfig(num_clients=len(tr), rounds=args.rounds,
-                         seed=args.seed, agg=agg_cfg, privacy=priv_cfg)
+                         seed=args.seed, agg=agg_cfg, privacy=priv_cfg,
+                         compression=comp_cfg)
         fed = FederatedGPO(gcfg, fcfg, data, tr, ev)
         hist = fed.run(rounds=args.rounds, log_every=10)
         print(f"final loss={hist.round_loss[-1]:.4f} "
@@ -164,30 +187,44 @@ def main() -> None:
         if args.trainer == "fedavg":
             client_params = broadcast_to_clients(params, c)
             opt_states = jax.vmap(opt.init)(client_params)
-            rnd = jax.jit(make_backbone_fedavg_round(cfg, opt,
-                                                     args.local_steps,
-                                                     agg=agg,
-                                                     privacy=priv_cfg))
+            rnd = jax.jit(make_backbone_fedavg_round(
+                cfg, opt, args.local_steps, agg=agg, privacy=priv_cfg,
+                compression=comp_cfg))
             server_state = agg.init(params)
+            payload = params
         else:
             lora = init_lora(params, key, rank=8)
             client_params = broadcast_to_clients(lora, c)
             opt_states = jax.vmap(opt.init)(client_params)
-            rnd = jax.jit(make_fedlora_round(cfg, params, opt,
-                                             args.local_steps, agg=agg,
-                                             privacy=priv_cfg))
+            rnd = jax.jit(make_fedlora_round(
+                cfg, params, opt, args.local_steps, agg=agg,
+                privacy=priv_cfg, compression=comp_cfg))
             server_state = agg.init(lora)
+            payload = lora
         # full participation => sampling rate 1 for the accountant
         accountant = make_accountant(priv_cfg, 1.0)
         noise_base = jax.random.PRNGKey(args.seed + 17)
+        # EF residual (DESIGN.md §10): one flat f32 row per client
+        ef = comp_cfg.enabled and comp_cfg.error_feedback
+        need_key = (comp_cfg.enabled
+                    and (priv_cfg.enabled or comp_cfg.needs_rng))
+        resid = (jnp.zeros((c, tree_count_params(payload)), jnp.float32)
+                 if ef else None)
         for r in range(args.rounds):
             batches = _stack_client_batches(it, c, args.local_steps)
             round_args = (client_params, opt_states, batches, weights,
                           server_state)
-            if priv_cfg.enabled:
+            if comp_cfg.enabled:
+                if ef:
+                    round_args += (resid,)
+                if need_key:
+                    round_args += (jax.random.fold_in(noise_base, r),)
+            elif priv_cfg.enabled:
                 round_args += (jax.random.fold_in(noise_base, r),)
-            client_params, opt_states, losses, server_state = rnd(
-                *round_args)
+            out = rnd(*round_args)
+            client_params, opt_states, losses, server_state = out[:4]
+            if ef:
+                resid = out[4]
             eps = (f" eps={accountant.epsilon(r + 1):.3f}"
                    if accountant else "")
             print(f"round {r:3d} client losses="

@@ -138,6 +138,103 @@ def test_clip_reduce_kernel_matches_ref_random_shapes(c, p, clip, seed):
 
 
 @settings(**SETTINGS)
+@given(st.integers(1, 6), st.integers(1, 400), st.integers(0, 2 ** 31 - 1))
+def test_stochastic_rounding_is_unbiased_on_uniform_grid(c, p, seed):
+    """Compression invariant (DESIGN.md §10): E_υ[Q(x)] = x for the int8
+    stochastic rounder. Averaging over a deterministic N-point uniform
+    grid υ_j = j/N equals the expectation to within one grid step, so
+    the property is exact (no statistical flakiness): the grid mean of
+    dequant(⌊x/s + υ_j⌋)·s lies within s·(1/N + fp slack) of x."""
+    from repro.core import dequantize_int8, quantize_int8
+
+    key = jax.random.PRNGKey(seed)
+    vecs = jax.random.normal(key, (c, p)) * 5.0
+    n = 64
+    grid = jnp.broadcast_to(
+        (jnp.arange(n, dtype=jnp.float32) / n)[:, None, None], (n, c, p))
+    q, s = jax.vmap(lambda u: quantize_int8(vecs, uniform=u))(grid)
+    mean = np.asarray(jnp.mean(
+        jax.vmap(dequantize_int8)(q, s), axis=0))
+    _, s0 = quantize_int8(vecs)
+    bound = np.asarray(s0)[:, None] * (1.0 / n + 1e-4)
+    assert np.all(np.abs(mean - np.asarray(vecs)) <= bound)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 6), st.integers(1, 500),
+       st.sampled_from(["int8", "topk"]), st.integers(0, 2 ** 31 - 1))
+def test_ef_residual_identity_and_determinism(c, p, kind, seed):
+    """EF21 invariants: t + e' == d̃ + e exactly (the residual is the
+    codec error, nothing more), and the transport is a deterministic
+    function of (values, keys) — same inputs, same transmitted values."""
+    from repro.configs import CompressionConfig
+    from repro.core import compression as cx
+
+    key = jax.random.PRNGKey(seed)
+    vecs = jax.random.normal(key, (c, p))
+    resid = 0.5 * jax.random.normal(jax.random.fold_in(key, 1), (c, p))
+    keys = jax.random.split(jax.random.fold_in(key, 2), c)
+    comp = CompressionConfig(kind=kind, topk_frac=0.1)
+    t, new_r = cx.ef_compress_flat(vecs, keys, comp, resid)
+    np.testing.assert_allclose(np.asarray(t + new_r),
+                               np.asarray(vecs + resid),
+                               rtol=1e-5, atol=1e-6)
+    t2, new_r2 = cx.ef_compress_flat(vecs, keys, comp, resid)
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(t2))
+    np.testing.assert_array_equal(np.asarray(new_r), np.asarray(new_r2))
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 8), st.integers(1, 1024), st.booleans(),
+       st.integers(0, 2 ** 31 - 1))
+def test_quant_clip_reduce_kernel_matches_ref_random_shapes(
+        c, p, stochastic, seed):
+    """Kernel == oracle on random shapes. p <= 1024 keeps the kernel to
+    a single Pallas block, so its norm/absmax reductions are the same
+    single op as the oracle's and no rounding decision can flip on
+    float reassociation (multi-block coverage with a level-sized
+    tolerance lives in tests/test_compression.py)."""
+    from repro.core import client_uniform
+    from repro.kernels import agg_quant_clip_reduce
+    from repro.kernels.ref import ref_quant_clip_reduce
+
+    key = jax.random.PRNGKey(seed)
+    stacked = jax.random.normal(key, (c, p)) * 3.0
+    w = normalize_weights(
+        jax.random.uniform(jax.random.fold_in(key, 1), (c,), minval=0.1,
+                           maxval=10.0))
+    keys = jax.random.split(jax.random.fold_in(key, 2), c)
+    uniform = client_uniform(keys, (c, p)) if stochastic else None
+    clip = float(jnp.mean(jnp.linalg.norm(stacked, axis=1)))
+    out, _ = agg_quant_clip_reduce(stacked, w, clip=clip, uniform=uniform)
+    ref, _ = ref_quant_clip_reduce(stacked, w, clip=clip, uniform=uniform)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 8), st.integers(1, 3000), st.floats(0.01, 1.0),
+       st.integers(0, 2 ** 31 - 1))
+def test_topk_reduce_kernel_matches_ref_random_shapes(c, p, frac, seed):
+    from repro.core import topk_thresholds
+    from repro.kernels import agg_topk_reduce
+    from repro.kernels.ref import ref_topk_reduce
+
+    key = jax.random.PRNGKey(seed)
+    stacked = jax.random.normal(key, (c, p)) * 2.0
+    w = normalize_weights(
+        jax.random.uniform(jax.random.fold_in(key, 1), (c,), minval=0.1,
+                           maxval=10.0))
+    tau = topk_thresholds(stacked, frac)
+    out, er = agg_topk_reduce(stacked, w, tau, with_residual=True)
+    ref, ref_er = ref_topk_reduce(stacked, w, frac=frac)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(er), np.asarray(ref_er),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
 @given(st.floats(-100.0, 100.0), st.floats(1.0, 60.0))
 def test_softcap_bounded_and_monotone(x, cap):
     y = float(softcap(jnp.asarray(x), cap))
