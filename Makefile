@@ -3,8 +3,8 @@
 # @pytest.mark.slow so the quick suite stays under a few minutes.
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-priv test-comm test-cov bench bench-round \
-	bench-smoke
+.PHONY: test test-fast test-priv test-comm test-async test-cov bench \
+	bench-round bench-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -22,6 +22,11 @@ test-priv:
 test-comm:
 	$(PY) -m pytest -q tests/test_compression.py tests/test_property.py
 
+# quick iteration on the fault-tolerant asynchronous federation layer
+# (availability simulator, fedbuff, degraded modes — DESIGN.md §11)
+test-async:
+	$(PY) -m pytest -q tests/test_availability.py tests/test_scan_engine.py
+
 # tier-1 suite under pytest-cov (the CI job uploads coverage.xml as a
 # non-gating artifact; requires pytest-cov from requirements-dev.txt)
 test-cov:
@@ -33,10 +38,12 @@ bench-round:
 
 # reduced-config benchmark pass for the CI smoke job: exercises every
 # BENCH_*.json writer (round engine, aggregator sweep, attention
-# fwd+bwd, DP delta pipeline, compressed transport) in a few minutes
+# fwd+bwd, DP delta pipeline, compressed transport, fault tolerance)
+# in a few minutes
 bench-smoke:
 	$(PY) -m benchmarks.bench_round --rounds 30 --agg-rounds 10 --reps 2 \
-		--privacy --priv-rounds 30 --compress --comm-rounds 30
+		--privacy --priv-rounds 30 --compress --comm-rounds 30 \
+		--faults --async-rounds 30
 
 bench:
 	$(PY) -m benchmarks.run

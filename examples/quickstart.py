@@ -31,6 +31,15 @@ def main() -> None:
     #    (from repro.configs) — client deltas are then clipped + noised
     #    before aggregation and hist.round_eps tracks the cumulative ε
     #    from the Rényi accountant.
+    #    To simulate an unreliable population (DESIGN.md §11) add
+    #      avail=AvailabilityConfig(online_prob=0.8, crash_prob=0.05,
+    #                               straggler_prob=0.2, max_staleness=4)
+    #    — clients then drop out, crash, and upload late on a
+    #    deterministic per-seed schedule (hist.round_survivors records
+    #    the realized participation); pair it with
+    #    agg=AggConfig(name="fedbuff") for staleness-aware buffered
+    #    aggregation, and see `bench_round.py --faults` /
+    #    `dryrun.py --gpo-fed --faults` for the robustness numbers.
     gpo_cfg = GPOConfig(d_embed=data.phi.shape[-1])
     fed_cfg = FedConfig(num_clients=len(train_groups), rounds=150,
                         local_epochs=6, lr=3e-4, eval_every=25)

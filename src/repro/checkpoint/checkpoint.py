@@ -34,8 +34,23 @@ def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
     return flat
 
 
+def _fsync_dir(directory: str) -> None:
+    """fsync the directory entry so a rename survives power loss (POSIX
+    durability requires syncing the parent dir, not just the file)."""
+    fd = os.open(directory, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(directory: str, step: int, tree: PyTree,
                     metadata: dict | None = None) -> str:
+    """Atomic + durable: write to a same-directory temp file, flush and
+    fsync it, then ``os.replace`` over the final name and fsync the
+    directory. A crash mid-save leaves either the old checkpoint or the
+    new one — never a torn .npz — and ``latest_checkpoint`` never sees
+    the ``.tmp`` names."""
     os.makedirs(directory, exist_ok=True)
     flat = _flatten(tree)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
@@ -43,13 +58,26 @@ def save_checkpoint(directory: str, step: int, tree: PyTree,
     try:
         with os.fdopen(fd, "wb") as f:
             np.savez(f, **{k.replace("/", _SEP): v for k, v in flat.items()})
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
+        _fsync_dir(directory)
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
     if metadata is not None:
-        with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
-            json.dump(metadata, f, indent=2, default=str)
+        meta_path = os.path.join(directory, f"ckpt_{step:08d}.json")
+        fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(metadata, f, indent=2, default=str)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, meta_path)
+            _fsync_dir(directory)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
     return path
 
 

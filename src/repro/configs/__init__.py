@@ -7,6 +7,7 @@ from repro.configs.base import (  # noqa: F401
     INPUT_SHAPES,
     MAMBA,
     AggConfig,
+    AvailabilityConfig,
     CompressionConfig,
     FedConfig,
     GPOConfig,

@@ -237,6 +237,80 @@ class PrivacyConfig:
 
 
 @dataclass(frozen=True)
+class AvailabilityConfig:
+    """Client availability / failure simulator (DESIGN.md §11).
+
+    Drives the fault-injection layer of the federated round
+    (``core/availability.py``): per-round, per-client Bernoulli draws —
+    folded out of a per-round fault key, so the failure *schedule* is a
+    deterministic function of the seed and bit-identical across the
+    scan, loop, and sharded engines — decide which clients are offline,
+    which crash after local training (update lost before release), and
+    which straggle (their update arrives ``delay`` ∈ [1, max_staleness]
+    rounds late and is aggregated with a polynomial staleness discount
+    by buffered strategies). Crashed clients stay offline for
+    ``rejoin_rounds`` rounds before rejoining (crash-rejoin traces).
+
+    All of it is expressed as per-round masks / staleness vectors that
+    live INSIDE the jitted round (no Python-side branching), so the
+    fused ``lax.scan`` driver replays identical failure schedules.
+    The default (everything benign) disables the layer *statically*:
+    the engines trace the exact pre-fault computation, bit-equal to a
+    default run (pinned by tests/test_availability.py, the
+    privacy/compression degeneracy-pin style).
+    """
+
+    # per-round probability a client is reachable at all. 1.0 = always
+    # online (disables the availability draw).
+    online_prob: float = 1.0
+    # probability an online client crashes AFTER local training: the
+    # update is lost before release (EF residual untouched, opt state
+    # reverts — the machine died), and the client stays offline for
+    # ``rejoin_rounds`` further rounds.
+    crash_prob: float = 0.0
+    # probability an online, non-crashed client is a straggler: its
+    # released update arrives ``delay`` rounds late, delay uniform in
+    # [1, max_staleness]. While an upload is in flight the client is
+    # busy (it does not start a new round).
+    straggler_prob: float = 0.0
+    # staleness bound: the largest delay a straggler update can have.
+    max_staleness: int = 0
+    # rounds a crashed client stays offline before rejoining.
+    rejoin_rounds: int = 0
+
+    @property
+    def enabled(self) -> bool:
+        return (self.online_prob < 1.0 or self.crash_prob > 0.0
+                or self.straggler_prob > 0.0)
+
+    def release_rate(self) -> float:
+        """Per-round probability an (independently) sampled client's
+        update is eventually released: online ∧ no crash. Stragglers DO
+        release (late), so they count; the crash-rejoin and busy-while-
+        in-flight dynamics only lower availability further, so this is
+        an upper bound — the conservative direction for the §9 RDP
+        accountant (a larger q never under-reports ε)."""
+        if not self.enabled:
+            return 1.0
+        return self.online_prob * (1.0 - self.crash_prob)
+
+    def validate(self) -> None:
+        if not 0.0 <= self.online_prob <= 1.0:
+            raise ValueError("online_prob must lie in [0, 1]")
+        if not 0.0 <= self.crash_prob <= 1.0:
+            raise ValueError("crash_prob must lie in [0, 1]")
+        if not 0.0 <= self.straggler_prob <= 1.0:
+            raise ValueError("straggler_prob must lie in [0, 1]")
+        if self.max_staleness < 0 or self.rejoin_rounds < 0:
+            raise ValueError(
+                "max_staleness and rejoin_rounds must be >= 0")
+        if self.straggler_prob > 0.0 and self.max_staleness < 1:
+            raise ValueError(
+                "straggler_prob > 0 requires max_staleness >= 1: a "
+                "straggler's delay is drawn from [1, max_staleness]")
+
+
+@dataclass(frozen=True)
 class CompressionConfig:
     """Client→server delta-compression stage (DESIGN.md §10).
 
@@ -337,6 +411,20 @@ class AggConfig:
     # dataset-size weights exactly.
     fair_temp: float = 1.0
     fair_decay: float = 0.9
+    # fedbuff (FedBuff-style staleness-aware buffered aggregation,
+    # DESIGN.md §11): the server accumulates released client updates in
+    # a buffer and applies one server step only once ``buffer_k`` fresh-
+    # enough updates have arrived. buffer_k=1 flushes every round and
+    # degenerates to fedavg exactly (given full participation).
+    buffer_k: int = 4
+    # polynomial staleness discount s(τ) = (1 + τ)^(-staleness_power)
+    # applied to updates arriving τ rounds late (FedBuff's 1/sqrt(1+τ)
+    # at the 0.5 default). The fault-aware round discounts late
+    # arrivals for EVERY strategy through this knob; 0.0 recovers the
+    # classic synchronous baseline that lands stale deltas at full
+    # weight — the failure mode fedbuff's discounted buffering exists
+    # to fix (the BENCH_async.json fedavg cells pin it to 0.0).
+    staleness_power: float = 0.5
 
 
 @dataclass(frozen=True)
@@ -384,6 +472,17 @@ class FedConfig:
     # aggregator. The default (kind="none") traces the exact
     # pre-compression computation.
     compression: CompressionConfig = CompressionConfig()
+    # client availability / failure simulation (DESIGN.md §11): per-
+    # round offline/crash/straggler masks with deterministic fold-out
+    # keys, a staleness buffer for late arrivals, and graceful-
+    # degradation semantics for every aggregation strategy. The default
+    # (everything benign) traces the exact pre-fault computation.
+    avail: AvailabilityConfig = AvailabilityConfig()
+    # hard-error instead of warning when a configuration leaks
+    # un-privatized client statistics around the DP release — today:
+    # agg.name == "adaptive" keeps raw-loss EMAs (DESIGN.md §9) while
+    # noise_multiplier > 0 promises a DP guarantee on the deltas.
+    strict_privacy: bool = False
     # runtime-level override of GPOConfig.use_pallas_attention: None
     # defers to the model config; True/False forces the attention path
     # for every engine built from this FedConfig (FederatedGPO,

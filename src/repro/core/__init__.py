@@ -21,6 +21,19 @@ from repro.core.aggregation import (  # noqa: F401
     make_aggregator,
 )
 from repro.core.federated import FederatedGPO, History, make_sharded_round  # noqa: F401
+from repro.core.availability import (  # noqa: F401
+    FaultState,
+    RoundSchedule,
+    advance_fault_state,
+    fault_draws,
+    fold_fault_key,
+    init_fault_state,
+    masked_mean_weights,
+    masked_robust_reduce_flat,
+    round_schedule,
+    staleness_discount,
+    tree_where,
+)
 from repro.core.compression import (  # noqa: F401
     client_uniform,
     dequantize_int8,

@@ -91,15 +91,19 @@ class ServerAggregator:
     reduce_flat: Callable  # ((C, P), (C,)) -> (P,)  [sharded/kernel form]
     apply: Callable  # (state, global, delta, losses, idx) -> (global, state)
     step: Optional[Callable] = None  # weigh+reduce+apply; set in __post_init__
+    # buffered strategies (fedbuff) defer the server step until enough
+    # released updates accumulate; the fault-aware round path feeds their
+    # apply the realized mass/released counts (DESIGN.md §11)
+    buffered: bool = False
 
     def __post_init__(self):
         if self.step is None:
             def step(state, global_params, deltas, weights, losses=None,
-                     idx=None):
+                     idx=None, **kw):
                 w = self.weigh(state, weights, idx)
                 delta = self.reduce(deltas, w)
                 return self.apply(state, global_params, delta,
-                                  losses=losses, idx=idx)
+                                  losses=losses, idx=idx, **kw)
 
             object.__setattr__(self, "step", step)
 
@@ -199,7 +203,8 @@ def _robust_reduce(use_pallas: bool, k_of: Callable[[int], int]):
 def _apply_sgd(cfg: AggConfig):
     """theta += server_lr * Delta (FedAvg and the robust strategies)."""
 
-    def apply(state: AggState, global_params, delta, losses=None, idx=None):
+    def apply(state: AggState, global_params, delta, losses=None, idx=None,
+              **kw):
         new_g = jax.tree.map(
             lambda g, d: (g.astype(jnp.float32)
                           + cfg.server_lr * d.astype(jnp.float32)
@@ -241,7 +246,8 @@ def _make_fedavgm(cfg, *, num_clients, use_pallas):
     reduce, reduce_flat = _linear_reduce(use_pallas)
     beta = cfg.momentum
 
-    def apply(state: AggState, global_params, delta, losses=None, idx=None):
+    def apply(state: AggState, global_params, delta, losses=None, idx=None,
+              **kw):
         new_m = jax.tree.map(
             lambda m, d: beta * m + d.astype(jnp.float32), state.m, delta)
         new_g = jax.tree.map(
@@ -254,7 +260,7 @@ def _make_fedavgm(cfg, *, num_clients, use_pallas):
         # fused path: the delta-moment kernel emits (Delta, beta*m+Delta)
         # in one pass over the client stream (kernels/agg_reduce.py)
         def step(state, global_params, deltas, weights, losses=None,
-                 idx=None):
+                 idx=None, **kw):
             vecs = tree_ravel_clients(deltas)
             m_vec = tree_flatten_to_vector(state.m)
             _, nm_vec = agg_momentum_reduce(
@@ -285,7 +291,7 @@ def _make_fedadaptive(yogi: bool):
         b1, b2, tau = cfg.beta1, cfg.beta2, cfg.tau
 
         def apply(state: AggState, global_params, delta, losses=None,
-                  idx=None):
+                  idx=None, **kw):
             new_m = jax.tree.map(
                 lambda m, d: b1 * m + (1 - b1) * d.astype(jnp.float32),
                 state.m, delta)
@@ -377,7 +383,8 @@ def _make_adaptive(cfg, *, num_clients, use_pallas):
         w = weights * jnp.exp(temp * (s - jnp.mean(s)))
         return w / jnp.sum(w)
 
-    def apply(state: AggState, global_params, delta, losses=None, idx=None):
+    def apply(state: AggState, global_params, delta, losses=None, idx=None,
+              mask=None, **kw):
         new_g, state = base_apply(state, global_params, delta)
         if losses is not None:
             losses = losses.astype(jnp.float32)
@@ -387,9 +394,16 @@ def _make_adaptive(cfg, *, num_clients, use_pallas):
             new_ema = jnp.where(seen[idx] > 0,
                                 decay * ema[idx] + (1 - decay) * losses,
                                 losses)
+            new_seen = jnp.ones_like(seen[idx])
+            if mask is not None:
+                # fault mode: only clients whose update was RELEASED this
+                # round observed a trustworthy loss — crashed/offline rows
+                # keep their previous score (DESIGN.md §11)
+                new_ema = jnp.where(mask, new_ema, ema[idx])
+                new_seen = jnp.where(mask, 1.0, seen[idx])
             state = state._replace(scores={
                 "ema": ema.at[idx].set(new_ema),
-                "seen": seen.at[idx].set(1.0)})
+                "seen": seen.at[idx].set(new_seen)})
         return new_g, state
 
     def init(global_params):
@@ -407,3 +421,64 @@ def _make_adaptive(cfg, *, num_clients, use_pallas):
 @AGGREGATORS.register("adaptive")
 def _adaptive_factory():
     return _make_adaptive
+
+
+def _make_fedbuff(cfg, *, num_clients, use_pallas):
+    """FedBuff-style staleness-aware buffered aggregation (Nguyen et al.
+    2022; DESIGN.md §11). The reduce is the same ONE-psum weighted delta
+    moment as fedavg; the server step is deferred: the reduced update
+    accumulates into a buffer (``AggState.m``) together with its weight
+    mass and released-client count (``AggState.scores``), and the server
+    applies  theta += server_lr * buffer / mass  only once at least
+    ``buffer_k`` client updates have been absorbed since the last flush.
+
+    Staleness discounting happens UPSTREAM in the fault-aware round
+    (stale arrivals' weights are scaled by (1+tau)^-staleness_power
+    before the reduce); this apply only needs the realized ``mass`` and
+    ``released`` count. The synchronous engines pass neither: the
+    defaults (mass=1, released=|participants|) make buffer_k <= C flush
+    every round — fedbuff with buffer_k=1 is bit-for-bit fedavg there."""
+    reduce, reduce_flat = _linear_reduce(use_pallas)
+    base_lr = cfg.server_lr
+    buffer_k = cfg.buffer_k
+
+    def init(global_params):
+        state = _zeros_state(global_params, with_m=True)
+        return state._replace(scores={
+            "count": jnp.zeros((), jnp.float32),
+            "mass": jnp.zeros((), jnp.float32)})
+
+    def apply(state: AggState, global_params, delta, losses=None, idx=None,
+              mass=None, released=None, **kw):
+        if mass is None:
+            mass = jnp.ones((), jnp.float32)  # weights pre-normalized
+        if released is None:
+            released = jnp.asarray(
+                idx.shape[0] if idx is not None else num_clients,
+                jnp.float32)
+        mass = jnp.asarray(mass, jnp.float32)
+        released = jnp.asarray(released, jnp.float32)
+        buf = jax.tree.map(
+            lambda m, d: m + mass * d.astype(jnp.float32), state.m, delta)
+        count = state.scores["count"] + released
+        total = state.scores["mass"] + mass
+        flush = count >= buffer_k
+        scale = jnp.where(flush, base_lr / jnp.maximum(total, 1e-12), 0.0)
+        new_g = jax.tree.map(
+            lambda g, b: (g.astype(jnp.float32) + scale * b
+                          ).astype(g.dtype), global_params, buf)
+        new_m = jax.tree.map(lambda b: jnp.where(flush, 0.0, b), buf)
+        new_scores = {"count": jnp.where(flush, 0.0, count),
+                      "mass": jnp.where(flush, 0.0, total)}
+        return new_g, state._replace(step=state.step + 1, m=new_m,
+                                     scores=new_scores)
+
+    return ServerAggregator(
+        name=cfg.name, cfg=cfg, linear=True, needs_losses=False,
+        init=init, weigh=_identity_weigh, reduce=reduce,
+        reduce_flat=reduce_flat, apply=apply, buffered=True)
+
+
+@AGGREGATORS.register("fedbuff")
+def _fedbuff_factory():
+    return _make_fedbuff

@@ -149,6 +149,26 @@ def ef_compress_flat(vecs: jnp.ndarray, keys: Optional[jnp.ndarray],
     return t, (u - t if resid is not None else None)
 
 
+def release_flat(vecs: jnp.ndarray, keys: Optional[jnp.ndarray],
+                 privacy, comp: CompressionConfig,
+                 resid: Optional[jnp.ndarray]
+                 ) -> tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Per-client released values WITHOUT the client-axis reduction:
+    DP release (if enabled) then the EF/codec round trip, returning the
+    (C, P) transmitted matrix and the carry-out residual. The fault-
+    aware round (DESIGN.md §11) needs each client's wire value
+    individually — straggler payloads are buffered whole and lost
+    clients are masked after the fact — so the fused reduce-style
+    kernels don't apply here; the rows are bit-identical to the jnp
+    path of ``transport_delta_flat``."""
+    x = vecs.astype(jnp.float32)
+    if privacy.enabled:
+        x = dp.privatize_flat(x, keys, privacy)
+    if not comp.enabled:
+        return x, resid
+    return ef_compress_flat(x, keys, comp, resid)
+
+
 # ---------------------------------------------------------------------------
 # the full transport for client-stacked engines
 # ---------------------------------------------------------------------------

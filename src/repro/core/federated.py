@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig, GPOConfig
+from repro.core import availability as av
 from repro.core import compression as cx, fairness, privacy as dp
 from repro.core.aggregation import ServerAggregator, make_aggregator
 from repro.core.fedavg import (
@@ -150,6 +151,10 @@ class History:
     # the trainer. Empty when the privacy pipeline is disabled; inf per
     # round for clip-only runs (clipping alone carries no DP guarantee).
     round_eps: list = field(default_factory=list)
+    # fault injection (DESIGN.md §11): per-round count of updates the
+    # server actually absorbed (fresh releases + buffered arrivals).
+    # Empty when AvailabilityConfig is disabled.
+    round_survivors: list = field(default_factory=list)
 
 
 class FederatedGPO:
@@ -160,6 +165,8 @@ class FederatedGPO:
         assert gpo_cfg.d_embed == data.phi.shape[-1]
         fed_cfg.privacy.validate()
         fed_cfg.compression.validate()
+        fed_cfg.avail.validate()
+        dp.check_adaptive_privacy(fed_cfg)
         self.gpo_cfg, self.fed_cfg, self.data = gpo_cfg, fed_cfg, data
         self.train_groups = jnp.asarray(train_groups, jnp.int32)
         self.eval_groups = jnp.asarray(eval_groups, jnp.int32)
@@ -182,6 +189,17 @@ class FederatedGPO:
                 jnp.float32)
         else:
             self.ef_resid = None
+        # fault injection (DESIGN.md §11): availability/failure state —
+        # crash-rejoin traces plus the straggler in-flight buffer — rides
+        # next to the server state; None keeps the fault-free trace
+        # byte-identical (the disabled default compiles the exact
+        # pre-feature round functions below).
+        self._faults = fed_cfg.avail.enabled
+        if self._faults:
+            self.fault_state = av.init_fault_state(
+                len(train_groups), tree_count_params(self.global_params))
+        else:
+            self.fault_state = None
         per_client = broadcast_to_clients(self.global_params,
                                           len(train_groups))
         self.opt_states = jax.vmap(self.opt.init)(per_client)
@@ -195,11 +213,18 @@ class FederatedGPO:
         m = fed_cfg.batch_groups or num_clients
         m = min(m, num_clients)
 
-        # DP accounting (DESIGN.md §9): one sampled Gaussian mechanism
-        # per round at rate q = m/C; ε lands in History.round_eps on the
-        # host — the per-step RDP is constant, so no device state exists.
-        self._accountant = dp.make_accountant(fed_cfg.privacy,
-                                              m / num_clients)
+        # DP accounting (DESIGN.md §9, §11): one sampled Gaussian
+        # mechanism per round at the REALIZED participation rate
+        # q = (m/C) · release_rate — a client releases a delta only when
+        # it is sampled AND online AND does not crash, so the effective
+        # per-round inclusion probability shrinks under faults (the
+        # availability draws are independent of the data, making this the
+        # standard amplification-by-subsampling composition; stragglers
+        # still release — late — and are counted). release_rate is 1.0
+        # with faults disabled, keeping the pre-§11 epsilon exactly.
+        self._accountant = dp.make_accountant(
+            fed_cfg.privacy,
+            (m / num_clients) * fed_cfg.avail.release_rate())
         self._rounds_elapsed = 0
 
         agg = self.agg
@@ -317,9 +342,160 @@ class FederatedGPO:
             return (global_params, opt_states, resid, server_state, key,
                     losses, scores)
 
-        self._round = jax.jit(round_step)
+        # ------------------------------------------------------------------
+        # Fault-aware round (DESIGN.md §11). A STATIC Python branch: with
+        # AvailabilityConfig disabled (the default) the round/block
+        # functions above compile exactly as before — the bit-equal pin
+        # in tests/test_availability.py rides on this. The fault round
+        # trades the fused reduce kernels for a per-client release
+        # (payloads must be individually maskable/bufferable) and keeps
+        # every failure decision inside the trace as masks: no Python
+        # branching on schedule values.
+        avail = fed_cfg.avail
+
+        def fault_round_step(global_params, opt_states, server_state,
+                             resid, fault, key):
+            k_sub, k_train = jax.random.split(key)
+            if m < num_clients:
+                idx = jax.random.choice(k_sub, num_clients, (m,),
+                                        replace=False)
+            else:
+                idx = jnp.arange(num_clients)
+            groups = self.train_groups[idx]
+            sizes = data.sizes[groups].astype(jnp.float32)
+            w = sizes / jnp.sum(sizes)
+            w_eff = agg.weigh(server_state, w, idx)
+            # the failure schedule: a pure function of (round key, client
+            # index, carried fault state) — replicated-computable, so the
+            # sharded engine replays it bit-identically (fold_fault_key).
+            fault_key = av.fold_fault_key(key)
+            sched = av.round_schedule(fault_key, fault, avail, num_clients)
+            # sampling is oblivious to availability (the coordinator
+            # cannot know who will fail); realized participation is
+            # sampled ∧ available. Draws of non-sampled clients are
+            # discarded — only their in-flight arrivals act this round.
+            sampled = jnp.zeros((num_clients,), bool).at[idx].set(True)
+            sched = sched._replace(
+                available=sched.available & sampled,
+                fresh=sched.fresh & sampled,
+                crashed=sched.crashed & sampled,
+                straggle=sched.straggle & sampled)
+            client_params = broadcast_to_clients(global_params, m)
+            if fed_cfg.reset_opt_each_round:
+                opt_sub = jax.vmap(self.opt.init)(client_params)
+            else:
+                opt_sub = jax.tree.map(lambda x: x[idx], opt_states)
+            keys = jax.random.split(k_train, m)
+            new_client_params, opt_sub, losses = jax.vmap(local_train)(
+                client_params, opt_sub, keys, groups)
+            # opt states advance only where the round's local work
+            # survived: offline clients never trained, crashed clients
+            # lost theirs with the crash
+            keep = (sched.fresh | sched.straggle)[idx]
+
+            def merge(full, sub):
+                k_ = keep.reshape((-1,) + (1,) * (sub.ndim - 1))
+                return full.at[idx].set(jnp.where(k_, sub, full[idx]))
+
+            opt_states = jax.tree.map(merge, opt_states, opt_sub)
+            # per-client release (DP then EF/codec, NO reduction): the
+            # EF21 residual rows advance exactly for releasing clients
+            # (fresh + stragglers — they do transmit, just late);
+            # crashed/offline rows are untouched (delta never released).
+            deltas = tree_sub(new_client_params, client_params)
+            r_sub = resid[idx] if ef else None
+            rel_sub, new_r = cx.release_flat(
+                tree_ravel_clients(deltas), keys, priv, comp, r_sub)
+            if ef:
+                resid = resid.at[idx].set(
+                    jnp.where(keep[:, None], new_r, resid[idx]))
+            rel_full = jnp.zeros(
+                (num_clients, rel_sub.shape[1]),
+                jnp.float32).at[idx].set(rel_sub)
+            w_full = jnp.zeros((num_clients,), jnp.float32).at[idx].set(
+                w_eff.astype(jnp.float32))
+            # this round's contributions: fresh releases at full weight +
+            # buffered arrivals discounted by realized staleness. A
+            # client that is both (its stale upload lands while it also
+            # trains fresh) contributes the weight-averaged row.
+            disc = av.staleness_discount(sched.staleness,
+                                         fed_cfg.agg.staleness_power)
+            w_fresh = jnp.where(sched.fresh, w_full, 0.0)
+            w_arr = jnp.where(sched.arrive,
+                              fault.pending_weight * disc, 0.0)
+            w_c = w_fresh + w_arr
+            mask_c = w_c > 0.0
+            contrib = jnp.where(
+                mask_c[:, None],
+                (w_fresh[:, None] * rel_full
+                 + w_arr[:, None] * fault.pending)
+                / jnp.maximum(w_c, 1e-12)[:, None], 0.0)
+            n_released = (jnp.sum(sched.fresh.astype(jnp.int32))
+                          + jnp.sum(sched.arrive.astype(jnp.int32)))
+            any_surv = n_released > 0
+            # degraded-mode reduce: linear renormalizes over survivors;
+            # robust shrinks its trim depth with the survivor count
+            if agg.linear:
+                wn = av.masked_mean_weights(w_c, mask_c)
+                delta_vec = agg.reduce_flat(contrib, wn)
+            else:
+                delta_vec = av.masked_robust_reduce_flat(
+                    contrib, w_c, mask_c, name=agg.name,
+                    trim_frac=fed_cfg.agg.trim_frac)
+            delta = tree_unflatten_from_vector(delta_vec, global_params)
+            kw = {}
+            if agg.buffered:
+                kw = dict(mass=jnp.sum(w_c),
+                          released=n_released.astype(jnp.float32))
+            if agg.needs_losses:
+                # adaptive: the server only observed losses that arrived
+                # with a fresh release
+                kw["mask"] = sched.fresh[idx]
+            new_global, new_state = agg.apply(
+                server_state, global_params, delta, losses=losses,
+                idx=idx, **kw)
+            # zero-survivor round: verified no-op on params AND AggState
+            new_global = av.tree_where(any_surv, new_global, global_params)
+            server_state = av.tree_where(any_surv, new_state, server_state)
+            fault = av.advance_fault_state(fault, sched, rel_full, w_full,
+                                           avail.rejoin_rounds)
+            # mean loss over clients whose local round survived
+            n_train = jnp.sum(keep.astype(jnp.float32))
+            loss_mean = (jnp.sum(jnp.where(keep, losses, 0.0))
+                         / jnp.maximum(n_train, 1.0))
+            return (new_global, opt_states, server_state, resid, fault,
+                    loss_mean, n_released)
+
+        @functools.partial(jax.jit, donate_argnums=(1, 2, 3))
+        def fault_block_fn(global_params, opt_states, resid, fault,
+                           server_state, key, eval_mask):
+            def body(carry, do_eval):
+                g, opt_s, r, f, srv, k = carry
+                k, k_round, k_eval = jax.random.split(k, 3)
+                (g, opt_s, srv, r, f, loss,
+                 n_rel) = fault_round_step(g, opt_s, srv, r, f, k_round)
+                scores = jax.lax.cond(
+                    do_eval,
+                    lambda gp, ke: eval_fn(gp, ke).astype(jnp.float32),
+                    lambda gp, ke: jnp.zeros((num_eval,), jnp.float32),
+                    g, k_eval)
+                return (g, opt_s, r, f, srv, k), (loss, scores, n_rel)
+
+            ((global_params, opt_states, resid, fault, server_state, key),
+             (losses, scores, n_rel)) = jax.lax.scan(
+                body,
+                (global_params, opt_states, resid, fault, server_state,
+                 key), eval_mask, unroll=fed_cfg.scan_unroll)
+            return (global_params, opt_states, resid, fault, server_state,
+                    key, losses, scores, n_rel)
+
+        if self._faults:
+            self._round = jax.jit(fault_round_step)
+            self._block = fault_block_fn
+        else:
+            self._round = jax.jit(round_step)
+            self._block = block_fn
         self._eval = jax.jit(eval_fn)
-        self._block = block_fn
 
     def _eval_mask(self, rounds: int) -> np.ndarray:
         """Rounds that evaluate: every ``eval_every``-th and the last."""
@@ -385,10 +561,20 @@ class FederatedGPO:
         for start in range(0, full_end, chunk):
             mask = eval_mask[start:start + chunk]
             try:
-                (self.global_params, self.opt_states, self.ef_resid,
-                 self.server_state, key, losses, scores) = self._block(
-                    self.global_params, self.opt_states, self.ef_resid,
-                    self.server_state, key, jnp.asarray(mask))
+                if self._faults:
+                    (self.global_params, self.opt_states, self.ef_resid,
+                     self.fault_state, self.server_state, key, losses,
+                     scores, n_rel) = self._block(
+                        self.global_params, self.opt_states, self.ef_resid,
+                        self.fault_state, self.server_state, key,
+                        jnp.asarray(mask))
+                    hist.round_survivors.extend(
+                        int(x) for x in np.asarray(n_rel))
+                else:
+                    (self.global_params, self.opt_states, self.ef_resid,
+                     self.server_state, key, losses, scores) = self._block(
+                        self.global_params, self.opt_states, self.ef_resid,
+                        self.server_state, key, jnp.asarray(mask))
             except BaseException:
                 self._recover_donated_opt_states()
                 raise
@@ -410,11 +596,19 @@ class FederatedGPO:
         driver and the scan driver's sub-chunk tail. Returns the carried
         key (chain identical to one scan step)."""
         key, k_round, k_eval = jax.random.split(key, 3)
-        (self.global_params, self.opt_states, self.server_state,
-         self.ef_resid, losses) = self._round(
-            self.global_params, self.opt_states, self.server_state,
-            self.ef_resid, k_round)
-        hist.round_loss.append(float(jnp.mean(losses)))
+        if self._faults:
+            (self.global_params, self.opt_states, self.server_state,
+             self.ef_resid, self.fault_state, loss, n_rel) = self._round(
+                self.global_params, self.opt_states, self.server_state,
+                self.ef_resid, self.fault_state, k_round)
+            hist.round_loss.append(float(loss))
+            hist.round_survivors.append(int(n_rel))
+        else:
+            (self.global_params, self.opt_states, self.server_state,
+             self.ef_resid, losses) = self._round(
+                self.global_params, self.opt_states, self.server_state,
+                self.ef_resid, k_round)
+            hist.round_loss.append(float(jnp.mean(losses)))
         self._note_privacy(hist, 1)
         if eval_mask[r]:
             scores = np.asarray(self._eval(self.global_params, k_eval))
@@ -439,6 +633,15 @@ class FederatedGPO:
         if self.ef_resid is not None and getattr(
                 self.ef_resid, "is_deleted", lambda: False)():
             self.ef_resid = jnp.zeros(self.ef_resid.shape, jnp.float32)
+        if self.fault_state is not None and any(
+                getattr(x, "is_deleted", lambda: False)()
+                for x in jax.tree.leaves(self.fault_state)):
+            # the in-flight buffer is lost with the interrupt; restart
+            # the schedule from an empty fault state (deterministic
+            # replay resumes from the carried round key)
+            self.fault_state = av.init_fault_state(
+                len(self.train_groups),
+                tree_count_params(self.global_params))
 
     def _run_loop(self, rounds: int, log_every: int) -> History:
         hist = History()
@@ -614,7 +817,143 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
         client_params = broadcast_to_clients(global_params, c_local)
         return client_params, new_opt, losses, server_state, new_resid
 
-    if ef:
+    # ----------------------------------------------------------------------
+    # Fault-aware sharded round (DESIGN.md §11). The schedule is derived
+    # REPLICATED on every shard from the replicated ``fault_key`` + the
+    # static client count — no collective is spent agreeing on who
+    # failed — and ``weights`` arrive replicated (full (C,)) so the
+    # survivor-mass renormalization is also computed redundantly per
+    # shard. Only the in-flight straggler payloads (``FaultState.
+    # pending``, the one parameter-sized leaf) are sharded with their
+    # clients. Net effect: the linear family keeps its ONE psum with
+    # byte-identical shape (survivor weights are zeroed, lost rows
+    # contribute 0·row); the robust family keeps its single (C, P) f32
+    # all-gather of the combined contribution rows (under compression
+    # this forgoes the int8 wire layout — buffered arrivals are stored
+    # decompressed, so the fault path gathers f32; dryrun --faults
+    # reports the realized bytes).
+    avail = fed_cfg.avail
+
+    def fault_round_body(client_params, opt_states, keys, group_ids,
+                         weights, server_state, fault, fault_key,
+                         resid=None):
+        c_local = keys.shape[0]
+        num_clients = weights.shape[0]  # replicated full population
+        shard = 0
+        for a in axes:  # static mesh shape: no collective for the index
+            shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
+        gids = shard * c_local + jnp.arange(c_local, dtype=jnp.int32)
+        sched = av.round_schedule(fault_key, fault, avail, num_clients)
+        new_params, new_opt, losses = jax.vmap(local_train)(
+            client_params, opt_states, keys, group_ids)
+        deltas = tree_sub(new_params, client_params)
+        global_prev = tree_index(client_params, 0)
+        fresh_l = sched.fresh[gids]
+        keep_l = fresh_l | sched.straggle[gids]
+        new_opt = jax.tree.map(
+            lambda n, o: jnp.where(
+                keep_l.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+            new_opt, opt_states)
+        # shard-local per-client release; EF rows advance only where the
+        # client actually released (fresh or straggler-sent)
+        rel_l, new_r = cx.release_flat(
+            tree_ravel_clients(deltas), keys, priv, comp, resid)
+        new_resid = (jnp.where(keep_l[:, None], new_r, resid)
+                     if ef else None)
+        # contribution weights: replicated-computable from the schedule
+        w_eff = weights.astype(jnp.float32)
+        disc = av.staleness_discount(sched.staleness,
+                                     fed_cfg.agg.staleness_power)
+        w_fresh = jnp.where(sched.fresh, w_eff, 0.0)
+        w_arr = jnp.where(sched.arrive, fault.pending_weight * disc, 0.0)
+        w_c = w_fresh + w_arr
+        mask_c = w_c > 0.0
+        n_released = (jnp.sum(sched.fresh.astype(jnp.int32))
+                      + jnp.sum(sched.arrive.astype(jnp.int32)))
+        any_surv = n_released > 0
+        mass = jnp.sum(w_c)
+        # local combined contribution rows (same float ops as the
+        # stacked engine, sliced at this shard's global client ids)
+        wf_l, wa_l, wc_l = w_fresh[gids], w_arr[gids], w_c[gids]
+        contrib_l = jnp.where(
+            (wc_l > 0.0)[:, None],
+            (wf_l[:, None] * rel_l + wa_l[:, None] * fault.pending)
+            / jnp.maximum(wc_l, 1e-12)[:, None], 0.0)
+        if agg.linear:
+            wn_l = av.masked_mean_weights(w_c, mask_c)[gids]
+            if fed_cfg.use_pallas_aggregation:
+                local_vec = fedavg_reduce(contrib_l, wn_l)
+            else:
+                local_vec = jnp.einsum("c,cp->p", wn_l, contrib_l)
+            delta = tree_unflatten_from_vector(
+                jax.lax.psum(local_vec, axes), global_prev)
+        else:
+            all_vecs = jax.lax.all_gather(contrib_l, axes, axis=0,
+                                          tiled=True)
+            delta = tree_unflatten_from_vector(
+                av.masked_robust_reduce_flat(
+                    all_vecs, w_c, mask_c, name=agg.name,
+                    trim_frac=fed_cfg.agg.trim_frac), global_prev)
+        all_losses = (jax.lax.all_gather(losses, axes, axis=0, tiled=True)
+                      if agg.needs_losses else None)
+        kw = {}
+        if agg.buffered:
+            kw = dict(mass=mass, released=n_released.astype(jnp.float32))
+        if agg.needs_losses:
+            kw["mask"] = sched.fresh
+        new_global, new_state = agg.apply(
+            server_state, global_prev, delta, losses=all_losses, idx=None,
+            **kw)
+        new_global = av.tree_where(any_surv, new_global, global_prev)
+        server_state = av.tree_where(any_surv, new_state, server_state)
+        # advance the fault state: metadata replicated, payloads local
+        r = fault.round
+        strag_l, arr_l = sched.straggle[gids], sched.arrive[gids]
+        pending_l = jnp.where(strag_l[:, None], rel_l,
+                              jnp.where(arr_l[:, None], 0.0,
+                                        fault.pending))
+        fault = av.FaultState(
+            round=r + 1,
+            offline_until=jnp.where(
+                sched.crashed, r + 1 + int(avail.rejoin_rounds),
+                fault.offline_until),
+            pending=pending_l,
+            pending_due=jnp.where(
+                sched.straggle, r + sched.delay,
+                jnp.where(sched.arrive, av.NO_PENDING,
+                          fault.pending_due)),
+            pending_weight=jnp.where(
+                sched.straggle, w_eff,
+                jnp.where(sched.arrive, 0.0, fault.pending_weight)),
+            pending_birth=jnp.where(sched.straggle, r,
+                                    fault.pending_birth))
+        client_params = broadcast_to_clients(new_global, c_local)
+        return (client_params, new_opt, losses, server_state, fault,
+                new_resid)
+
+    faults = avail.enabled
+    if faults:
+        fault_spec = av.FaultState(
+            round=repl, offline_until=repl, pending=spec,
+            pending_due=repl, pending_weight=repl, pending_birth=repl)
+        # weights replicated: every shard renormalizes the survivor mass
+        # redundantly instead of spending a collective on it
+        if ef:
+            in_specs = (spec, spec, spec, spec, repl, repl, fault_spec,
+                        repl, spec)
+            out_specs = (spec, spec, spec, repl, fault_spec, spec)
+            body = fault_round_body
+        else:
+            in_specs = (spec, spec, spec, spec, repl, repl, fault_spec,
+                        repl)
+            out_specs = (spec, spec, spec, repl, fault_spec)
+
+            def body(client_params, opt_states, keys, group_ids, weights,
+                     server_state, fault, fault_key):
+                return fault_round_body(client_params, opt_states, keys,
+                                        group_ids, weights, server_state,
+                                        fault, fault_key)[:5]
+    elif ef:
         in_specs = (spec, spec, spec, spec, spec, repl, spec)
         out_specs = (spec, spec, spec, repl, spec)
         body = round_body
@@ -631,9 +970,9 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
                         out_specs=out_specs, check_rep=False)
 
     def round_fn(client_params, opt_states, keys, group_ids, weights,
-                 server_state, *maybe_resid):
+                 server_state, *rest):
         weights = agg.weigh(server_state, weights, None)
         return sharded(client_params, opt_states, keys, group_ids, weights,
-                       server_state, *maybe_resid)
+                       server_state, *rest)
 
     return round_fn

@@ -217,3 +217,27 @@ def make_accountant(privacy: PrivacyConfig,
         return None
     return RdpAccountant(privacy.noise_multiplier, sampling_rate,
                          privacy.target_delta, privacy.accountant_orders)
+
+
+_ADAPTIVE_PRIVACY_MSG = (
+    "agg.name='adaptive' reweighs groups by their RAW per-round local "
+    "losses, which are shipped to the server UN-privatized (DESIGN.md "
+    "§9): with noise_multiplier={z} > 0 the reported RDP epsilon does "
+    "NOT cover the loss side-channel. Use a non-adaptive strategy for "
+    "a DP run, or set FedConfig.strict_privacy=False to proceed with "
+    "this warning.")
+
+
+def check_adaptive_privacy(fed_cfg) -> None:
+    """Guard the adaptive-aggregation + DP-noise foot-gun: the loss EMAs
+    that drive the adaptive weights leak un-noised training losses, so a
+    run claiming an (ε, δ) from the accountant would over-claim. Warns
+    loudly by default; ``FedConfig.strict_privacy=True`` hard-errors."""
+    if (fed_cfg.agg.name == "adaptive" and fed_cfg.privacy.enabled
+            and fed_cfg.privacy.noise_multiplier > 0.0):
+        msg = _ADAPTIVE_PRIVACY_MSG.format(
+            z=fed_cfg.privacy.noise_multiplier)
+        if fed_cfg.strict_privacy:
+            raise ValueError(msg)
+        import warnings
+        warnings.warn(msg, UserWarning, stacklevel=2)

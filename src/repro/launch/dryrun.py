@@ -175,6 +175,7 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
                     noise_multiplier: float = 0.0,
                     compress: str = "none",
                     topk_frac: float = 0.01,
+                    faults: bool = False,
                     verbose: bool = True) -> dict:
     """Compile the shard_map federated GPO round for one aggregation
     strategy on a ``clients``-device 'data' mesh and report its
@@ -194,16 +195,25 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
     an int8-payload + f32-scale all-gather (~4x fewer bytes — the
     reported byte counts, parsed both flat from the HLO text and
     trip-count-aware via ``launch/hlo_cost.py``, prove it); the linear
-    family dequantizes shard-locally and keeps its one f32 psum."""
+    family dequantizes shard-locally and keeps its one f32 psum.
+    ``faults`` compiles the fault-aware round (DESIGN.md §11): the
+    failure schedule is derived replicated from the fault key and
+    survivor weights are zeroed/renormalized shard-locally, so the
+    linear family's collective schedule must keep the SAME single
+    parameter-sized psum — tests/test_availability.py pins the byte
+    counts equal to the fault-free round."""
     from jax.sharding import NamedSharding
-    from repro.configs import (AggConfig, CompressionConfig, FedConfig,
-                               GPOConfig, PrivacyConfig)
+    from repro.configs import (AggConfig, AvailabilityConfig,
+                               CompressionConfig, FedConfig, GPOConfig,
+                               PrivacyConfig)
     from repro.core import make_aggregator
+    from repro.core.availability import init_fault_state
     from repro.core.federated import make_sharded_round
     from repro.core.gpo import init_gpo_params
     from repro.data import SurveyConfig, make_survey_data
     from repro.launch import hlo_cost
-    from repro.launch.sharding import server_state_shardings
+    from repro.launch.sharding import (fault_state_shardings,
+                                       server_state_shardings)
     from repro.optim import adam
     from repro.utils.pytree import tree_count_params
 
@@ -216,11 +226,15 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
     privacy = PrivacyConfig(clip_norm=clip_norm,
                             noise_multiplier=noise_multiplier)
     compression = CompressionConfig(kind=compress, topk_frac=topk_frac)
+    avail = (AvailabilityConfig(online_prob=0.8, crash_prob=0.05,
+                                straggler_prob=0.1, max_staleness=4)
+             if faults else AvailabilityConfig())
     fcfg = FedConfig(num_clients=clients, local_epochs=2, num_context=6,
                      num_target=6, agg=AggConfig(name=agg_name),
                      use_pallas_aggregation=use_pallas,
                      use_pallas_attention=use_pallas_attention,
-                     privacy=privacy, compression=compression)
+                     privacy=privacy, compression=compression,
+                     avail=avail)
     opt = adam(fcfg.lr)
     agg = make_aggregator(fcfg.agg, num_clients=clients,
                           use_pallas=use_pallas)
@@ -236,12 +250,25 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
     opt_s = shard(opt.init(params))
     keys = jax.ShapeDtypeStruct((clients, 2), jnp.uint32, sharding=spec)
     gids = jax.ShapeDtypeStruct((clients,), jnp.int32, sharding=spec)
-    w = jax.ShapeDtypeStruct((clients,), jnp.float32, sharding=spec)
+    repl = NamedSharding(mesh, P())
+    # fault mode: weights arrive replicated — every shard renormalizes
+    # the survivor mass redundantly (DESIGN.md §11)
+    w = jax.ShapeDtypeStruct((clients,), jnp.float32,
+                             sharding=repl if faults else spec)
     srv = jax.tree.map(
         lambda x, s: jax.ShapeDtypeStruct(tuple(x.shape), x.dtype,
                                           sharding=s),
         server_state, server_state_shardings(server_state, mesh))
     args = (cp, opt_s, keys, gids, w, srv)
+    if faults:
+        fault0 = init_fault_state(clients, tree_count_params(params))
+        f_shard = fault_state_shardings(mesh)
+        fault = jax.tree.map(
+            lambda x, s: jax.ShapeDtypeStruct(tuple(x.shape), x.dtype,
+                                              sharding=s),
+            fault0, f_shard)
+        fkey = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=repl)
+        args += (fault, fkey)
     if compression.enabled and compression.error_feedback:
         args += (jax.ShapeDtypeStruct(
             (clients, tree_count_params(params)), jnp.float32,
@@ -265,6 +292,7 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
         "noise_multiplier": noise_multiplier,
         "compress": compress,
         "topk_frac": topk_frac if compress == "topk" else None,
+        "faults": faults,
         "linear": agg.linear,
         "compile_s": round(time.time() - t0, 1),
         "collective_bytes_by_kind": dict(coll.bytes_by_kind),
@@ -277,6 +305,7 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
     if verbose:
         print(f"== gpo-fed round x agg={agg_name} mesh={clients}"
               + (f" compress={compress}" if compress != "none" else "")
+              + (" faults" if faults else "")
               + " ==")
         print("collectives:", result["collective_bytes_by_kind"])
         print("collectives (hlo_cost, trip-aware):",
@@ -316,6 +345,11 @@ def main() -> None:
     ap.add_argument("--topk-frac", type=float, default=0.01,
                     help="fraction of coordinates kept for "
                          "--compress topk")
+    ap.add_argument("--faults", action="store_true",
+                    help="compile the --gpo-fed round with the fault-"
+                         "injection layer (DESIGN.md §11): replicated "
+                         "failure schedule, masked survivor weights — "
+                         "the linear family must keep its ONE psum")
     ap.add_argument("--out", default=None, help="append result as json line")
     args = ap.parse_args()
     if not args.gpo_fed and not (args.arch and args.shape):
@@ -323,7 +357,8 @@ def main() -> None:
     what = (f"gpo-fed x {args.agg} clients={args.clients}"
             + (" private" if args.private else "")
             + (f" compress={args.compress}" if args.compress != "none"
-               else "") if args.gpo_fed
+               else "")
+            + (" faults" if args.faults else "") if args.gpo_fed
             else f"{args.arch} x {args.shape} multi_pod={args.multi_pod}")
     try:
         if args.gpo_fed:
@@ -333,7 +368,8 @@ def main() -> None:
                 clip_norm=args.clip_norm if args.private else 0.0,
                 noise_multiplier=(args.noise_multiplier if args.private
                                   else 0.0),
-                compress=args.compress, topk_frac=args.topk_frac)
+                compress=args.compress, topk_frac=args.topk_frac,
+                faults=args.faults)
         else:
             result = lower_pair(args.arch, args.shape,
                                 multi_pod=args.multi_pod)

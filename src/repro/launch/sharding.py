@@ -138,6 +138,28 @@ def server_state_shardings(state: PyTree, mesh) -> PyTree:
     return jax.tree.map(lambda _: repl, state)
 
 
+def fault_state_shardings(mesh, client_axes=("data",)) -> PyTree:
+    """Shardings for ``core.availability.FaultState`` on the production
+    mesh (DESIGN.md §11). The schedule metadata — round counter, crash-
+    rejoin gates, pending due/weight/birth vectors — is replicated: every
+    shard recomputes the full-population failure schedule from the
+    replicated fault key, so no collective is spent agreeing on who
+    failed. Only ``pending`` (the in-flight straggler payloads, the one
+    parameter-sized leaf, (C, P)) shards over the client axes with its
+    owners."""
+    from repro.core.availability import FaultState
+
+    ax = tuple(client_axes)
+    repl = NamedSharding(mesh, P())
+    return FaultState(
+        round=repl,
+        offline_until=repl,
+        pending=NamedSharding(mesh, P(ax if len(ax) > 1 else ax[0])),
+        pending_due=repl,
+        pending_weight=repl,
+        pending_birth=repl)
+
+
 def adafactor_state_shardings(p_shard: PyTree, params_shapes: PyTree, mesh):
     """AdafactorState: v_row drops the param's last dim, v_col its
     second-to-last; v_full only exists for <2-D leaves (replicated)."""

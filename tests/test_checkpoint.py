@@ -37,6 +37,62 @@ def test_shape_mismatch_raises(tmp_path, rng):
         restore_checkpoint(path, {"other": jnp.zeros((2, 2))})
 
 
+def test_torn_write_leaves_previous_checkpoint(tmp_path, rng, monkeypatch):
+    """A crash mid-save (simulated by failing the final rename) must
+    leave the previous checkpoint fully restorable and never expose a
+    torn .npz under the ckpt_* name."""
+    import os
+
+    tree = {"w": jnp.arange(6.0).reshape(2, 3)}
+    good = save_checkpoint(str(tmp_path), 1, tree)
+
+    real_replace = os.replace
+
+    def torn_replace(src, dst):
+        if dst.endswith(".npz"):
+            raise OSError("simulated crash before rename")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", torn_replace)
+    with pytest.raises(OSError):
+        save_checkpoint(str(tmp_path), 2, {"w": jnp.full((2, 3), 9.0)})
+    monkeypatch.undo()
+
+    # the failed step-2 save left no ckpt_*.npz and no stray tmp files
+    assert latest_checkpoint(str(tmp_path)) == good
+    assert not [f for f in os.listdir(str(tmp_path)) if f.endswith(".tmp")]
+    restored = restore_checkpoint(good, {"w": jnp.zeros((2, 3))})
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(6.0).reshape(2, 3))
+
+
+def test_torn_write_mid_serialize(tmp_path, rng, monkeypatch):
+    """Crash DURING serialization (fsync fails before the rename): the
+    half-written temp bytes must never land under the final name, and a
+    re-save after 'restart' wins cleanly."""
+    import os
+
+    tree = {"w": jnp.ones((3,))}
+    save_checkpoint(str(tmp_path), 5, tree)
+
+    def boom(fd):
+        raise OSError("simulated disk-full during fsync")
+
+    monkeypatch.setattr(os, "fsync", boom)
+    with pytest.raises(OSError):
+        save_checkpoint(str(tmp_path), 6, {"w": jnp.full((3,), 2.0)})
+    monkeypatch.undo()
+
+    latest = latest_checkpoint(str(tmp_path))
+    assert latest.endswith("ckpt_00000005.npz")
+    # restart: the same step-6 save now succeeds and becomes latest
+    save_checkpoint(str(tmp_path), 6, {"w": jnp.full((3,), 2.0)})
+    restored = restore_checkpoint(latest_checkpoint(str(tmp_path)),
+                                  {"w": jnp.zeros((3,))})
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.full((3,), 2.0, np.float32))
+
+
 def test_optimizer_state_roundtrip(tmp_path, rng):
     params = {"w": jax.random.normal(rng, (5, 5))}
     opt = adam(1e-3)

@@ -483,3 +483,40 @@ def test_private_round_requires_aggregator():
         make_backbone_fedavg_round(
             cfg, adam(1e-3), 1, agg=None,
             privacy=PrivacyConfig(clip_norm=1.0))
+
+
+# ---------------------------------------------------------------------------
+# adaptive aggregation x DP noise guard (DESIGN.md §9: the loss
+# side-channel makes the reported epsilon an over-claim)
+# ---------------------------------------------------------------------------
+def test_adaptive_plus_noise_warns_on_construction():
+    priv = PrivacyConfig(clip_norm=1.0, noise_multiplier=0.8)
+    with pytest.warns(UserWarning, match="side-channel"):
+        _make_fed(privacy=priv, agg=AggConfig(name="adaptive"))
+
+
+def test_adaptive_plus_noise_strict_privacy_raises():
+    data = make_survey_data(SurveyConfig(
+        num_groups=6, num_questions=24, d_embed=8, seed=3))
+    tr, ev = split_groups(data, seed=3)
+    fcfg = FedConfig(num_clients=len(tr), rounds=2, local_epochs=1,
+                     num_context=4, num_target=4, seed=3,
+                     agg=AggConfig(name="adaptive"),
+                     privacy=PrivacyConfig(clip_norm=1.0,
+                                           noise_multiplier=0.8),
+                     strict_privacy=True)
+    with pytest.raises(ValueError, match="side-channel"):
+        FederatedGPO(GCFG, fcfg, data, tr, ev)
+
+
+def test_adaptive_guard_silent_when_benign():
+    """No warning for clip-only adaptive runs (no epsilon is claimed)
+    or for noised non-adaptive runs (no raw-loss side-channel)."""
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        _make_fed(privacy=PrivacyConfig(clip_norm=1.0),
+                  agg=AggConfig(name="adaptive"))
+        _make_fed(privacy=PrivacyConfig(clip_norm=1.0,
+                                        noise_multiplier=0.8))

@@ -154,6 +154,54 @@ def test_scan_engine_matches_loop_with_pallas_attention():
                        tol=dict(rtol=1e-3, atol=1e-4))
 
 
+def test_interrupted_scan_block_recovers_donated_state():
+    """A failure mid fused-scan block after the donated buffers were
+    consumed (preemption, OOM, Ctrl-C) must not brick the trainer:
+    ``run`` re-raises, rebuilds the opt states / EF residual / fault
+    state from the still-valid global params, and the next ``run``
+    trains normally."""
+    from repro.configs import AvailabilityConfig, CompressionConfig
+
+    data = make_survey_data(SurveyConfig(
+        num_groups=8, num_questions=40, d_embed=24, seed=5))
+    tr, ev = split_groups(data, seed=5)
+    fcfg = FedConfig(
+        num_clients=len(tr), rounds=4, local_epochs=1, eval_every=2,
+        num_context=6, num_target=6, seed=5,
+        compression=CompressionConfig(kind="int8"),
+        avail=AvailabilityConfig(online_prob=0.8, crash_prob=0.1,
+                                 straggler_prob=0.2, max_staleness=3))
+    fed = FederatedGPO(GCFG, fcfg, data, tr, ev)
+    hist1 = fed.run(rounds=2, engine="scan")
+    assert len(hist1.round_loss) == 2
+
+    real_block = fed._block
+
+    def dying_block(g, opt_s, resid, fault, srv, key, mask):
+        # the jit consumed its donated arguments, then the host died
+        jax.tree.map(lambda x: x.delete(), opt_s)
+        resid.delete()
+        jax.tree.map(lambda x: x.delete(), fault)
+        raise RuntimeError("simulated preemption mid-block")
+
+    fed._block = dying_block
+    with pytest.raises(RuntimeError, match="simulated preemption"):
+        fed.run(rounds=2, engine="scan")
+    fed._block = real_block
+
+    # every donated buffer was rebuilt (nothing still points at freed
+    # device memory), EF restarts at zero, the in-flight buffer is empty
+    for leaf in (jax.tree.leaves(fed.opt_states) + [fed.ef_resid]
+                 + jax.tree.leaves(fed.fault_state)):
+        assert not leaf.is_deleted()
+    assert not np.asarray(fed.ef_resid).any()
+    assert not np.asarray(fed.fault_state.pending).any()
+
+    hist2 = fed.run(rounds=2, engine="scan")
+    assert len(hist2.round_loss) == 2
+    assert np.all(np.isfinite(hist2.round_loss))
+
+
 def test_pallas_aggregation_round_path_matches_stacked():
     hist_jnp = _make_fed().run(rounds=4)
     fed_pal = _make_fed(use_pallas_aggregation=True)

@@ -1,4 +1,5 @@
 """Partial-participation FedAvg (beyond-paper extension) tests."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -34,3 +35,60 @@ def test_full_participation_unchanged():
     fed_zero = _setup(batch_groups=10_000)  # clipped to num_clients
     h2 = fed_zero.run(rounds=5)
     np.testing.assert_allclose(h1.round_loss, h2.round_loss, rtol=1e-5)
+
+
+def _replay_sampled_sets(seed, num_clients, m, rounds):
+    """Host replay of the round-key chain (PRNGKey(seed+1); per round
+    k, k_round, _ = split(k, 3); k_sub, _ = split(k_round)) — the same
+    derivation both drivers trace, so this predicts the sampled sets."""
+    key = jax.random.PRNGKey(seed + 1)
+    out = []
+    for _ in range(rounds):
+        key, k_round, _ = jax.random.split(key, 3)
+        k_sub, _ = jax.random.split(k_round)
+        idx = jax.random.choice(k_sub, num_clients, (m,), replace=False)
+        out.append(sorted(int(i) for i in np.asarray(idx)))
+    return out
+
+
+def test_batch_groups_one():
+    """The degenerate cohort of a single client per round still trains
+    (weights renormalize to [1.0]) and touches exactly one opt state."""
+    fed = _setup(batch_groups=1)
+    hist = fed.run(rounds=1, engine="loop")
+    assert np.isfinite(hist.round_loss).all()
+    steps = np.asarray(fed.opt_states.step)
+    (touched,) = np.nonzero(steps > 0)
+    assert touched.size == 1
+    (expected,) = _replay_sampled_sets(4, len(fed.train_groups), 1, 1)
+    assert touched.tolist() == expected
+    hist2 = fed.run(rounds=8, engine="scan")
+    assert np.isfinite(hist2.round_loss).all()
+
+
+def test_batch_groups_equals_num_clients_is_full_participation():
+    """batch_groups == C takes the full-participation trace (idx becomes
+    arange, no random.choice) — BIT-equal, not merely close."""
+    fed_full = _setup(batch_groups=0)
+    h_full = fed_full.run(rounds=4)
+    fed_c = _setup(batch_groups=len(fed_full.train_groups))
+    h_c = fed_c.run(rounds=4)
+    assert h_full.round_loss == h_c.round_loss  # floats, bit-for-bit
+    for a, b in zip(jax.tree.leaves(fed_full.global_params),
+                    jax.tree.leaves(fed_c.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sampled_sets_deterministic_across_engines():
+    """Same seed => the same per-round cohorts in both drivers. The set
+    each engine consumed is observed through which per-client opt states
+    advanced, and both must equal the host replay of the key chain."""
+    observed, expected = {}, None
+    for engine in ("loop", "scan"):
+        fed = _setup(batch_groups=3)
+        expected = _replay_sampled_sets(4, len(fed.train_groups), 3, 1)[0]
+        fed.run(rounds=1, engine=engine)
+        steps = np.asarray(fed.opt_states.step)
+        observed[engine] = sorted(np.nonzero(steps > 0)[0].tolist())
+        assert len(observed[engine]) == 3
+    assert observed["loop"] == observed["scan"] == expected
