@@ -3,8 +3,8 @@
 # @pytest.mark.slow so the quick suite stays under a few minutes.
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-priv test-comm test-async test-cov bench \
-	bench-round bench-smoke
+.PHONY: test test-fast test-priv test-comm test-async test-serve \
+	test-cov bench bench-round bench-serve bench-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -27,6 +27,11 @@ test-comm:
 test-async:
 	$(PY) -m pytest -q tests/test_availability.py tests/test_scan_engine.py
 
+# quick iteration on the serving engine (prefix cache, continuous
+# batching, int8 inference — DESIGN.md §12)
+test-serve:
+	$(PY) -m pytest -q tests/test_serving.py
+
 # tier-1 suite under pytest-cov (the CI job uploads coverage.xml as a
 # non-gating artifact; requires pytest-cov from requirements-dev.txt)
 test-cov:
@@ -36,14 +41,19 @@ test-cov:
 bench-round:
 	$(PY) -m benchmarks.bench_round
 
+bench-serve:
+	$(PY) -m benchmarks.bench_serve
+
 # reduced-config benchmark pass for the CI smoke job: exercises every
 # BENCH_*.json writer (round engine, aggregator sweep, attention
-# fwd+bwd, DP delta pipeline, compressed transport, fault tolerance)
-# in a few minutes
+# fwd+bwd, DP delta pipeline, compressed transport, fault tolerance,
+# serving engine) in a few minutes
 bench-smoke:
 	$(PY) -m benchmarks.bench_round --rounds 30 --agg-rounds 10 --reps 2 \
 		--privacy --priv-rounds 30 --compress --comm-rounds 30 \
 		--faults --async-rounds 30
+	$(PY) -m benchmarks.bench_serve --requests 24 --train-rounds 5 \
+		--reps 2 --rates 25,50,100
 
 bench:
 	$(PY) -m benchmarks.run

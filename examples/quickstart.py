@@ -47,7 +47,12 @@ def main() -> None:
     hist = fed.run(rounds=150, log_every=25)
 
     # 3. Serve: predict an UNSEEN group's answer distribution from a few
-    #    in-context examples (the paper's reward-model use case).
+    #    in-context examples (the paper's reward-model use case). Under
+    #    real query load, use the multi-tenant engine instead
+    #    (DESIGN.md §12): core.PreferenceServer adds continuous batching
+    #    over ragged requests, a prefix/KV cache for repeated group
+    #    contexts, and an int8 weight path — see
+    #    examples/serve_preferences.py and `serve --gpo`.
     group = int(eval_groups[0])
     batch = sample_icl_batch(jax.random.PRNGKey(42), data, group,
                              num_context=12, num_target=4)

@@ -1,31 +1,36 @@
-"""Batched preference serving: the trained federated predictor acts as a
-lightweight group-conditioned reward model (paper §5) answering batched
-requests "what would group g answer to question q?".
+"""Preference serving through the multi-tenant engine: the trained
+federated predictor acts as a lightweight group-conditioned reward model
+(paper §5) answering ragged-length requests "what would group g answer to
+question q?" via ``PreferenceServer`` (DESIGN.md §12) — admission queue,
+bucketed continuous batching, prefix/KV cache over shared ICL contexts,
+and optional int8 weights.
 
-  PYTHONPATH=src python examples/serve_preferences.py --requests 16
+  PYTHONPATH=src python examples/serve_preferences.py --requests 32
+  PYTHONPATH=src python examples/serve_preferences.py --requests 32 --int8
 """
 import argparse
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import FedConfig, GPOConfig
-from repro.core import FederatedGPO, predict_preferences
-from repro.core.fairness import alignment_score, fairness_index
-from repro.data import (
-    SurveyConfig,
-    make_survey_data,
-    sample_icl_batch,
-    split_groups,
+from repro.configs import FedConfig, GPOConfig, ServeConfig
+from repro.core import (
+    FederatedGPO,
+    PreferenceServer,
+    latency_summary,
+    make_request_trace,
 )
+from repro.core.fairness import alignment_score, fairness_index
+from repro.data import SurveyConfig, make_survey_data, split_groups
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--train-rounds", type=int, default=120)
+    ap.add_argument("--hit-ratio", type=float, default=0.5)
+    ap.add_argument("--int8", action="store_true")
     args = ap.parse_args()
 
     data = make_survey_data(SurveyConfig(seed=0))
@@ -37,33 +42,31 @@ def main() -> None:
     fed.run(rounds=args.train_rounds)
     params = fed.global_params
 
-    # batched request path: vmap over (group, context) requests — this is
-    # the serving engine; each request carries its own in-context examples
-    @jax.jit
-    def serve(keys, groups):
-        def one(k, g):
-            b = sample_icl_batch(k, data, g, fcfg.num_context,
-                                 fcfg.num_target)
-            pred = predict_preferences(params, gcfg, b.ctx_x, b.ctx_y,
-                                       b.tgt_x, data.num_options)
-            truth = b.tgt_y.reshape(-1, data.num_options)
-            return alignment_score(pred, truth)
-
-        return jax.vmap(one)(keys, groups)
-
-    key = jax.random.PRNGKey(123)
-    groups = jnp.asarray(np.resize(ev, args.requests), jnp.int32)
-    keys = jax.random.split(key, args.requests)
-    serve(keys, groups)  # warmup/compile
+    # the serving engine: requests with ragged (context, target) lengths
+    # against unseen groups; hit-ratio controls how many share an
+    # already-prefilled ICL prefix (the repeated-group serving shape)
+    server = PreferenceServer(
+        params, gcfg, ServeConfig(int8_weights=args.int8),
+        num_options=data.num_options)
+    trace = make_request_trace(data, list(ev), num_requests=args.requests,
+                               hit_ratio=args.hit_ratio, seed=123)
+    server.run_trace(trace[: min(8, len(trace))])  # warmup/compile
     t0 = time.time()
-    scores = serve(keys, groups)
-    jax.block_until_ready(scores)
-    dt = time.time() - t0
+    results = server.run_trace(trace)
+    wall = time.time() - t0
+    s = latency_summary(results, wall)
 
-    print(f"\nserved {args.requests} requests in {dt*1e3:.1f}ms "
-          f"({args.requests/dt:.0f} req/s)")
-    print(f"per-unseen-group AS: "
-          f"{np.round(np.asarray(scores), 3).tolist()}")
+    scores = jnp.asarray([
+        alignment_score(
+            jnp.asarray(c.pred),
+            jnp.asarray(np.asarray(data.prefs)[
+                trace[c.rid].meta["group"], trace[c.rid].meta["tgt_q"]]))
+        for c in results])
+    mode = "int8" if args.int8 else "f32"
+    print(f"\nserved {s['completed']} requests ({mode}) in "
+          f"{wall*1e3:.1f}ms across {len(server.batches)} batches")
+    print(f"p50={s['p50_ms']:.2f}ms p99={s['p99_ms']:.2f}ms "
+          f"qps={s['qps']:.0f} prefix-cache hit-rate={s['hit_rate']:.2f}")
     print(f"mean AS={float(scores.mean()):.4f}  "
           f"FI={float(fairness_index(scores)):.4f}")
 

@@ -1,5 +1,6 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
     save_checkpoint,
     restore_checkpoint,
+    restore_checkpoint_quantized,
     latest_checkpoint,
 )

@@ -101,6 +101,18 @@ def restore_checkpoint(path: str, like: PyTree) -> PyTree:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def restore_checkpoint_quantized(path: str, like: PyTree) -> PyTree:
+    """Serving load path (DESIGN.md §12): restore the f32 GPO params from
+    ``path`` (validated against ``like`` exactly as ``restore_checkpoint``)
+    and quantize the dense weights to int8 ``QuantizedLinear`` leaves in
+    one step. Checkpoints on disk stay f32 — quantization is a load-time
+    transform, so the same artifact serves both precisions and the int8
+    scales are always derived from the authoritative weights."""
+    from repro.core.serving import quantize_gpo_params
+
+    return quantize_gpo_params(restore_checkpoint(path, like))
+
+
 def latest_checkpoint(directory: str) -> str | None:
     if not os.path.isdir(directory):
         return None

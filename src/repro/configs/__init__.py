@@ -14,6 +14,7 @@ from repro.configs.base import (  # noqa: F401
     InputShape,
     ModelConfig,
     PrivacyConfig,
+    ServeConfig,
     TrainConfig,
     config_dict,
     get_arch,

@@ -369,6 +369,63 @@ class CompressionConfig:
 
 
 @dataclass(frozen=True)
+class ServeConfig:
+    """Multi-tenant reward-model serving engine (DESIGN.md §12).
+
+    Drives ``core/serving.py::PreferenceServer``: a FIFO request queue
+    with admission control, a continuous batcher that pads ragged
+    context/target lengths to a small static *bucket* set (so the
+    jitted ``prefill``/``decode`` shape family stays compile-cached), an
+    LRU prefix cache of per-layer context K/V keyed on the shared ICL
+    context (hits skip prefill entirely and are bit-equal to the cold
+    path — the neural-process mask makes the context encoding exactly
+    target-independent), and an optional int8 weight-only inference
+    path that quantizes checkpoint weights at load time with the §10
+    symmetric-quantization contract.
+    """
+
+    # largest number of requests fused into one decode dispatch
+    max_batch: int = 8
+    # padded batch sizes: the batcher pads a partial batch up to the
+    # smallest bucket >= its size (dummy rows, sliced off) so the
+    # compiled shape set is the bucket list, not every integer <= max
+    batch_buckets: Tuple[int, ...] = (1, 2, 4, 8)
+    # padded context / target lengths in POINTS (m questions x A
+    # options); requests pad to the smallest bucket that fits. Target
+    # buckets must be multiples of the survey's num_options so padded
+    # rows reshape into whole questions.
+    ctx_buckets: Tuple[int, ...] = (40, 80, 160)
+    tgt_buckets: Tuple[int, ...] = (20, 40, 80, 160)
+    # admission control: submissions beyond this queue depth are
+    # rejected (the caller sees backpressure instead of unbounded
+    # latency). 0 = unbounded.
+    max_queue: int = 128
+    # prefix-cache capacity in entries (LRU eviction); 0 disables the
+    # cache (every request prefills — the benchmark cold baseline).
+    cache_entries: int = 256
+    # quantize the predictor's dense weights to int8 at load time and
+    # serve through the fused int8 matmul kernel (DESIGN.md §12)
+    int8_weights: bool = False
+
+    def validate(self) -> None:
+        for name, buckets in (("batch_buckets", self.batch_buckets),
+                              ("ctx_buckets", self.ctx_buckets),
+                              ("tgt_buckets", self.tgt_buckets)):
+            if not buckets or list(buckets) != sorted(set(buckets)):
+                raise ValueError(
+                    f"{name} must be non-empty strictly ascending, got "
+                    f"{buckets}")
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.max_batch > self.batch_buckets[-1]:
+            raise ValueError(
+                f"max_batch={self.max_batch} exceeds the largest batch "
+                f"bucket {self.batch_buckets[-1]}")
+        if self.max_queue < 0 or self.cache_entries < 0:
+            raise ValueError("max_queue and cache_entries must be >= 0")
+
+
+@dataclass(frozen=True)
 class AggConfig:
     """Server-aggregation strategy (DESIGN.md §7).
 

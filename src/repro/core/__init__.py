@@ -2,8 +2,11 @@
 # with FedAvg across groups (PluralLLM), plus the centralized baseline,
 # fairness metrics, FedLoRA, and the federated backbone trainers.
 from repro.core.gpo import (  # noqa: F401
+    GPOPrefix,
     gpo_apply,
+    gpo_decode,
     gpo_loss,
+    gpo_prefill,
     init_gpo_params,
     predict_preferences,
 )
@@ -49,6 +52,15 @@ from repro.core.privacy import (  # noqa: F401
     make_accountant,
     private_delta_flat,
     privatize_flat,
+)
+from repro.core.serving import (  # noqa: F401
+    BatchRecord,
+    Completed,
+    PreferenceServer,
+    Request,
+    latency_summary,
+    make_request_trace,
+    quantize_gpo_params,
 )
 from repro.core.centralized import CentralizedGPO  # noqa: F401
 from repro.core import fairness  # noqa: F401

@@ -23,9 +23,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import GPOConfig
+from repro.kernels.quant_matmul import QuantizedLinear
 from repro.models.layers import dense_init, rms_norm
 
 NEG_INF = -1e30
+
+
+def _mm(x, w):
+    """Dense-layer matmul with static weight-format dispatch: plain f32
+    arrays multiply directly; ``QuantizedLinear`` leaves (the serving
+    engine's load-time int8 weights, DESIGN.md §12) route through the
+    fused int8 kernel. The pytree structure is static under jit, so the
+    training path traces exactly as before."""
+    if isinstance(w, QuantizedLinear):
+        from repro.kernels import int8_matmul
+
+        return int8_matmul(x, w.q, w.scale)
+    return x @ w
 
 
 class GPOLayer(NamedTuple):
@@ -95,7 +109,7 @@ def gpo_apply(params: dict, cfg: GPOConfig, ctx_x, ctx_y, tgt_x):
         [tgt_x, jnp.zeros((t, 2), tgt_x.dtype)], axis=-1)
     tokens = jnp.concatenate([ctx_tok, tgt_tok], axis=0)  # (S, d_embed+2)
 
-    x = tokens @ params["in_proj"]  # (S, d)
+    x = _mm(tokens, params["in_proj"])  # (S, d)
     h_dim = cfg.head_dim
     nh = cfg.num_heads
 
@@ -103,9 +117,9 @@ def gpo_apply(params: dict, cfg: GPOConfig, ctx_x, ctx_y, tgt_x):
         layer = GPOLayer(*layer)
         h = rms_norm(x, layer.ln1, cfg.norm_eps)
         s = h.shape[0]
-        q = (h @ layer.wq).reshape(s, nh, h_dim)
-        k = (h @ layer.wk).reshape(s, nh, h_dim)
-        v = (h @ layer.wv).reshape(s, nh, h_dim)
+        q = _mm(h, layer.wq).reshape(s, nh, h_dim)
+        k = _mm(h, layer.wk).reshape(s, nh, h_dim)
+        v = _mm(h, layer.wv).reshape(s, nh, h_dim)
         if cfg.use_pallas_attention:
             # banded flash kernel with a custom VJP (DESIGN.md §4, §8):
             # valid under jax.grad, so training (gpo_loss) and inference
@@ -121,15 +135,135 @@ def gpo_apply(params: dict, cfg: GPOConfig, ctx_x, ctx_y, tgt_x):
             probs = jax.nn.softmax(scores.astype(jnp.float32),
                                    axis=-1).astype(v.dtype)
             att = jnp.einsum("hij,jhd->ihd", probs, v).reshape(s, -1)
-        x = x + att @ layer.wo
+        x = x + _mm(att, layer.wo)
         h2 = rms_norm(x, layer.ln2, cfg.norm_eps)
-        x = x + jax.nn.gelu(h2 @ layer.w1) @ layer.w2
+        x = x + _mm(jax.nn.gelu(_mm(h2, layer.w1)), layer.w2)
         return x, None
 
     x, _ = jax.lax.scan(body, x, params["layers"],
                         unroll=min(cfg.layer_unroll, cfg.num_layers))
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    out = x[m:] @ params["head"]  # (t, 1 or 2)
+    out = _mm(x[m:], params["head"])  # (t, 1 or 2)
+    mu = out[:, 0]
+    log_sigma = out[:, 1] if cfg.learn_sigma else None
+    return mu, log_sigma
+
+
+class GPOPrefix(NamedTuple):
+    """Per-layer context K/V from ``gpo_prefill`` — the reusable half of
+    a GPO forward pass (DESIGN.md §12).
+
+    The neural-process mask makes the split exact, not approximate:
+    context tokens attend ONLY to context tokens, so their hidden states
+    — and therefore every layer's context keys/values — are independent
+    of whatever targets are later decoded against them. ``k``/``v`` are
+    (L, M, nh, hd); rows at positions >= the ``ctx_len`` the prefix was
+    built with are padding and must be masked by the consumer."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+    @property
+    def num_ctx(self) -> int:
+        return self.k.shape[1]
+
+
+def _key_mask(num_keys: int, ctx_len) -> Optional[jnp.ndarray]:
+    """(num_keys,) bool — True for real context positions. ``ctx_len``
+    may be a traced scalar (the serving engine batches ragged requests
+    padded to a shared bucket); None means every position is real."""
+    if ctx_len is None:
+        return None
+    return jnp.arange(num_keys) < ctx_len
+
+
+def gpo_prefill(params: dict, cfg: GPOConfig, ctx_x, ctx_y,
+                ctx_len=None) -> GPOPrefix:
+    """Run the context block alone and cache per-layer K/V.
+
+    ctx_x (M, d_embed), ctx_y (M,) — M may include padding rows, with
+    ``ctx_len`` (static or traced scalar) giving the real count; padded
+    rows are excluded as attention *keys*, so their (garbage, finite)
+    hidden states never influence real rows. Batch with vmap.
+    """
+    m = ctx_x.shape[0]
+    tokens = jnp.concatenate(
+        [ctx_x, ctx_y[:, None], jnp.ones((m, 1), ctx_x.dtype)], axis=-1)
+    x = _mm(tokens, params["in_proj"])  # (M, d)
+    h_dim, nh = cfg.head_dim, cfg.num_heads
+    mask = _key_mask(m, ctx_len)
+
+    def body(x, layer: GPOLayer):
+        layer = GPOLayer(*layer)
+        h = rms_norm(x, layer.ln1, cfg.norm_eps)
+        q = _mm(h, layer.wq).reshape(m, nh, h_dim)
+        k = _mm(h, layer.wk).reshape(m, nh, h_dim)
+        v = _mm(h, layer.wv).reshape(m, nh, h_dim)
+        scores = jnp.einsum("ihd,jhd->hij", q, k) / jnp.sqrt(
+            jnp.asarray(h_dim, jnp.float32))
+        if mask is not None:
+            scores = jnp.where(mask[None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores.astype(jnp.float32),
+                               axis=-1).astype(v.dtype)
+        att = jnp.einsum("hij,jhd->ihd", probs, v).reshape(m, -1)
+        x = x + _mm(att, layer.wo)
+        h2 = rms_norm(x, layer.ln2, cfg.norm_eps)
+        x = x + _mm(jax.nn.gelu(_mm(h2, layer.w1)), layer.w2)
+        return x, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, x, params["layers"],
+                               unroll=min(cfg.layer_unroll, cfg.num_layers))
+    return GPOPrefix(k=ks, v=vs)
+
+
+def gpo_decode(params: dict, cfg: GPOConfig, prefix: GPOPrefix, tgt_x,
+               ctx_len=None):
+    """Decode targets against a cached context prefix.
+
+    tgt_x (T, d_embed) -> (mu (T,), log_sigma (T,) or None). Each target
+    token attends to the prefix keys (masked to ``ctx_len``) plus
+    itself — an (nh, T, M+1) score tensor instead of the monolithic
+    (nh, S, S): prefill work is never repeated, which is the whole
+    point of the prefix cache. Padded target rows produce finite
+    garbage and must be sliced off by the caller (targets never attend
+    to each other, so they cannot perturb real rows). Batch with vmap.
+    """
+    t = tgt_x.shape[0]
+    mctx = prefix.num_ctx
+    tokens = jnp.concatenate(
+        [tgt_x, jnp.zeros((t, 2), tgt_x.dtype)], axis=-1)
+    x = _mm(tokens, params["in_proj"])  # (T, d)
+    h_dim, nh = cfg.head_dim, cfg.num_heads
+    mask = _key_mask(mctx, ctx_len)
+
+    def body(x, layer_kv):
+        layer, kc, vc = layer_kv  # kc/vc (M, nh, hd)
+        layer = GPOLayer(*layer)
+        h = rms_norm(x, layer.ln1, cfg.norm_eps)
+        q = _mm(h, layer.wq).reshape(t, nh, h_dim)
+        k_self = _mm(h, layer.wk).reshape(t, nh, h_dim)
+        v_self = _mm(h, layer.wv).reshape(t, nh, h_dim)
+        inv_sqrt = 1.0 / jnp.sqrt(jnp.asarray(h_dim, jnp.float32))
+        sc_ctx = jnp.einsum("ihd,jhd->hij", q, kc) * inv_sqrt  # (h, T, M)
+        sc_self = jnp.sum(q * k_self, axis=-1).T[:, :, None] * inv_sqrt
+        scores = jnp.concatenate([sc_ctx, sc_self], axis=-1)  # (h, T, M+1)
+        if mask is not None:
+            full = jnp.concatenate(
+                [mask, jnp.ones((1,), bool)])  # self always attends
+            scores = jnp.where(full[None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores.astype(jnp.float32),
+                               axis=-1).astype(v_self.dtype)
+        att = (jnp.einsum("hij,jhd->ihd", probs[..., :mctx], vc)
+               + probs[..., mctx:].transpose(1, 0, 2) * v_self)
+        x = x + _mm(att.reshape(t, -1), layer.wo)
+        h2 = rms_norm(x, layer.ln2, cfg.norm_eps)
+        x = x + _mm(jax.nn.gelu(_mm(h2, layer.w1)), layer.w2)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, (params["layers"], prefix.k, prefix.v),
+                        unroll=min(cfg.layer_unroll, cfg.num_layers))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    out = _mm(x, params["head"])  # (T, 1 or 2)
     mu = out[:, 0]
     log_sigma = out[:, 1] if cfg.learn_sigma else None
     return mu, log_sigma

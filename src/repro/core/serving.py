@@ -1,0 +1,463 @@
+"""Multi-tenant serving engine for the GPO preference predictor
+(DESIGN.md §12).
+
+The trained predictor is the paper's product: a group-conditioned reward
+model answering "what would group g answer to question q?" under real
+query load. This module turns the single-tenant, synchronous
+``predict_preferences`` call into a serving engine:
+
+* **Queue + admission** — ``submit`` appends to a FIFO queue bounded by
+  ``ServeConfig.max_queue``; over-capacity submissions are *rejected*
+  (backpressure) instead of growing tail latency without bound.
+* **Continuous batching over ragged lengths** — each engine ``step``
+  fuses up to ``max_batch`` head-of-line requests into one decode
+  dispatch. Requests carry ragged (context, target) lengths; the batcher
+  pads them to a small static *bucket* set (``ctx_buckets`` /
+  ``tgt_buckets`` / ``batch_buckets``) so the jitted shape family stays
+  compile-cached — the scheduler never reorders (FIFO preserves
+  arrival-order fairness and makes batch composition a pure function of
+  the queue contents, which is what the determinism test pins).
+  Newly-arrived requests join the next dispatch as soon as the current
+  one retires — continuous batching degenerate to the one-shot case of
+  a model whose whole decode is a single forward pass.
+* **Prefix cache** — ``gpo_prefill`` output (per-layer context K/V) is
+  cached under the request's ``prefix_key`` in an LRU of
+  ``cache_entries`` entries. Repeated ICL prefixes across requests —
+  the common serving shape: many queries conditioned on the same
+  group's survey context — skip prefill entirely. The neural-process
+  mask makes the context encoding exactly independent of targets, so a
+  hit is *bit-equal* to the cold path (same cached arrays in, same
+  jitted decode) and strictly cheaper: prefill is the O(M²) half.
+* **int8 inference** — ``quantize_gpo_params`` rewrites the dense
+  weights as ``QuantizedLinear`` leaves at load time (per-output-channel
+  symmetric scales, the §10 contract) and ``core/gpo.py::_mm`` routes
+  them through the fused int8 matmul kernel.
+
+Everything timing-related is measurement only: scheduling decisions
+depend exclusively on queue order, so a fixed arrival trace yields a
+fixed batch composition on any machine.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass
+from typing import Any, Hashable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GPOConfig, ServeConfig
+from repro.core.gpo import GPOLayer, GPOPrefix, gpo_decode, gpo_prefill
+from repro.kernels import quantize_linear
+
+PyTree = Any
+
+# GPOLayer fields that are dense matmul weights (quantized for int8
+# serving); the ln1/ln2 RMS-norm scales stay f32.
+_QUANT_FIELDS = ("wq", "wk", "wv", "wo", "w1", "w2")
+
+
+def quantize_gpo_params(params: PyTree) -> PyTree:
+    """Load-time int8 quantization of the GPO predictor's dense weights
+    (DESIGN.md §12): ``in_proj``, ``head``, and every per-layer matmul
+    become ``QuantizedLinear`` leaves (the stacked-layer leading axis is
+    carried into per-layer scales); norm scales stay f32. The returned
+    tree feeds every ``gpo_*`` entry point unchanged — ``_mm`` dispatches
+    on the leaf type."""
+    layers = params["layers"]
+    qlayers = GPOLayer(**{
+        f: (quantize_linear(getattr(layers, f)) if f in _QUANT_FIELDS
+            else getattr(layers, f))
+        for f in GPOLayer._fields})
+    return {
+        "in_proj": quantize_linear(params["in_proj"]),
+        "layers": qlayers,
+        "final_norm": params["final_norm"],
+        "head": quantize_linear(params["head"]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# request / result / batch-record types
+# ---------------------------------------------------------------------------
+@dataclass
+class Request:
+    """One preference query: predict a group's answer distributions for
+    ``tgt_x`` given the (ctx_x, ctx_y) in-context examples.
+    ``prefix_key`` identifies the shared context for prefix caching —
+    two requests with the same key MUST carry identical (ctx_x, ctx_y);
+    None disables caching for this request. ``arrival`` is seconds on
+    the engine clock (load-generation metadata, not a scheduling
+    input)."""
+
+    rid: int
+    ctx_x: np.ndarray  # (m*A, d_embed)
+    ctx_y: np.ndarray  # (m*A,)
+    tgt_x: np.ndarray  # (t*A, d_embed)
+    prefix_key: Optional[Hashable] = None
+    arrival: float = 0.0
+    meta: Optional[dict] = None  # caller-owned (e.g. group/question ids)
+
+
+@dataclass
+class Completed:
+    rid: int
+    pred: np.ndarray  # (t, A) rows on the simplex
+    cache_hit: bool
+    arrival: float
+    finished: float
+    batch_index: int
+
+    @property
+    def latency(self) -> float:
+        return self.finished - self.arrival
+
+
+@dataclass(frozen=True)
+class BatchRecord:
+    """Composition of one decode dispatch — the deterministic-scheduler
+    contract surface (tests pin these for a fixed arrival trace)."""
+
+    rids: Tuple[int, ...]
+    batch_pad: int  # padded batch size (a batch_buckets entry)
+    ctx_bucket: int
+    tgt_bucket: int
+    hits: Tuple[bool, ...]
+
+
+@dataclass
+class ServeStats:
+    submitted: int = 0
+    rejected: int = 0
+    completed: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    prefills: int = 0  # unique contexts actually prefilled
+    evictions: int = 0
+
+
+# ---------------------------------------------------------------------------
+# jitted batch kernels (params passed positionally: jit caches per shape)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _prefill_batch(params, cfg: GPOConfig, ctx_x, ctx_y, ctx_len):
+    """(B, M, d), (B, M), (B,) -> stacked GPOPrefix with (B, L, M, nh, hd)
+    K/V."""
+    return jax.vmap(
+        lambda cx, cy, cl: gpo_prefill(params, cfg, cx, cy, ctx_len=cl)
+    )(ctx_x, ctx_y, ctx_len)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "num_options"))
+def _decode_batch(params, cfg: GPOConfig, num_options: int,
+                  pk, pv, ctx_len, tgt_x):
+    """(B, L, M, nh, hd) x2, (B,), (B, T, d) -> (B, T/A, A) normalized
+    preference rows (the ``predict_preferences`` clip-and-normalize)."""
+
+    def one(k, v, cl, tx):
+        mu, _ = gpo_decode(params, cfg, GPOPrefix(k=k, v=v), tx, ctx_len=cl)
+        scores = jnp.clip(mu.reshape(-1, num_options), 1e-4, None)
+        return scores / scores.sum(axis=-1, keepdims=True)
+
+    return jax.vmap(one)(pk, pv, ctx_len, tgt_x)
+
+
+def _bucket_of(n: int, buckets: Sequence[int], what: str) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"{what} length {n} exceeds the largest bucket "
+                     f"{buckets[-1]}; grow ServeConfig.{what}_buckets")
+
+
+class PreferenceServer:
+    """The multi-tenant serving engine (module docstring; DESIGN.md §12).
+
+    ``submit`` enqueues (or rejects), ``step`` retires one fused batch,
+    ``run_trace`` drives a full arrival trace open-loop and returns the
+    completed results with per-request latencies.
+    """
+
+    def __init__(self, params: PyTree, gpo_cfg: GPOConfig,
+                 serve_cfg: ServeConfig = ServeConfig(), *,
+                 num_options: int):
+        serve_cfg.validate()
+        for b in serve_cfg.tgt_buckets:
+            if b % num_options:
+                raise ValueError(
+                    f"tgt bucket {b} is not a multiple of "
+                    f"num_options={num_options}: padded target rows must "
+                    "reshape into whole questions")
+        self.gcfg = gpo_cfg
+        self.scfg = serve_cfg
+        self.num_options = num_options
+        self.params = (quantize_gpo_params(params)
+                       if serve_cfg.int8_weights else params)
+        self._queue: deque[Request] = deque()
+        # prefix_key -> (k (L, Mb, nh, hd), v, ctx_len) at the request's
+        # own ctx bucket Mb
+        self._cache: OrderedDict[Hashable, tuple] = OrderedDict()
+        self.batches: List[BatchRecord] = []
+        self.stats = ServeStats()
+        self._clock_start = time.perf_counter()
+
+    # -- clock ----------------------------------------------------------
+    def now(self) -> float:
+        return time.perf_counter() - self._clock_start
+
+    def reset(self, *, clear_cache: bool = True) -> None:
+        """Drop queued work, stats, and the batch log (and optionally the
+        prefix cache) — between benchmark phases."""
+        self._queue.clear()
+        self.batches = []
+        self.stats = ServeStats()
+        if clear_cache:
+            self._cache.clear()
+        self._clock_start = time.perf_counter()
+
+    # -- admission ------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        self.stats.submitted += 1
+        if self.scfg.max_queue and len(self._queue) >= self.scfg.max_queue:
+            self.stats.rejected += 1
+            return False
+        self._queue.append(req)
+        return True
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    # -- prefix cache ---------------------------------------------------
+    def _cache_get(self, key: Hashable):
+        if key is None or self.scfg.cache_entries == 0:
+            return None
+        entry = self._cache.get(key)
+        if entry is not None:
+            self._cache.move_to_end(key)
+        return entry
+
+    def _cache_put(self, key: Hashable, entry) -> None:
+        if key is None or self.scfg.cache_entries == 0:
+            return
+        self._cache[key] = entry
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.scfg.cache_entries:
+            self._cache.popitem(last=False)
+            self.stats.evictions += 1
+
+    # -- one engine step ------------------------------------------------
+    def step(self) -> List[Completed]:
+        """Retire one fused batch: pop up to ``max_batch`` head-of-line
+        requests, prefill the cache misses (batched, at each request's
+        own ctx bucket so cache entries are batch-composition-independent
+        and hits stay bit-equal), gather everyone's prefix K/V, decode
+        once, complete."""
+        if not self._queue:
+            return []
+        take = min(self.scfg.max_batch, len(self._queue))
+        reqs = [self._queue.popleft() for _ in range(take)]
+        ctx_b = _bucket_of(max(r.ctx_x.shape[0] for r in reqs),
+                           self.scfg.ctx_buckets, "ctx")
+        tgt_b = _bucket_of(max(r.tgt_x.shape[0] for r in reqs),
+                           self.scfg.tgt_buckets, "tgt")
+        batch_b = _bucket_of(take, self.scfg.batch_buckets, "batch")
+
+        # cache lookups; a miss key shared within the batch prefills once
+        entries: dict = {}
+        hits: List[bool] = []
+        misses: List[Request] = []
+        seen_miss_keys: set = set()
+        for r in reqs:
+            entry = self._cache_get(r.prefix_key)
+            if entry is not None:
+                hits.append(True)
+                entries[id(r)] = entry
+                self.stats.cache_hits += 1
+            else:
+                hits.append(False)
+                self.stats.cache_misses += 1
+                if r.prefix_key is None or r.prefix_key not in seen_miss_keys:
+                    misses.append(r)
+                    if r.prefix_key is not None:
+                        seen_miss_keys.add(r.prefix_key)
+
+        # batched prefill of the misses, grouped by own ctx bucket
+        by_bucket: dict[int, List[Request]] = {}
+        for r in misses:
+            b = _bucket_of(r.ctx_x.shape[0], self.scfg.ctx_buckets, "ctx")
+            by_bucket.setdefault(b, []).append(r)
+        fresh: dict = {}
+        for b, group in sorted(by_bucket.items()):
+            gb = _bucket_of(len(group), self.scfg.batch_buckets, "batch")
+            cxs = np.zeros((gb, b, group[0].ctx_x.shape[1]), np.float32)
+            cys = np.zeros((gb, b), np.float32)
+            lens = np.zeros((gb,), np.int32)
+            for i, r in enumerate(group):
+                mlen = r.ctx_x.shape[0]
+                cxs[i, :mlen] = r.ctx_x
+                cys[i, :mlen] = r.ctx_y
+                lens[i] = mlen
+            pre = _prefill_batch(self.params, self.gcfg,
+                                 jnp.asarray(cxs), jnp.asarray(cys),
+                                 jnp.asarray(lens))
+            self.stats.prefills += len(group)
+            for i, r in enumerate(group):
+                entry = (pre.k[i], pre.v[i], int(lens[i]))
+                fresh[r.prefix_key] = entry
+                self._cache_put(r.prefix_key, entry)
+                if r.prefix_key is None:
+                    entries[id(r)] = entry
+        for r in reqs:
+            if id(r) not in entries:
+                entries[id(r)] = fresh[r.prefix_key]
+
+        # gather + pad to the batch buckets, decode once
+        ks, vs, lens, txs = [], [], [], []
+        for r in reqs:
+            k, v, mlen = entries[id(r)]
+            pad_m = ctx_b - k.shape[1]
+            if pad_m:
+                widths = ((0, 0), (0, pad_m), (0, 0), (0, 0))
+                k, v = jnp.pad(k, widths), jnp.pad(v, widths)
+            ks.append(k)
+            vs.append(v)
+            lens.append(mlen)
+            tx = np.zeros((tgt_b, r.tgt_x.shape[1]), np.float32)
+            tx[:r.tgt_x.shape[0]] = r.tgt_x
+            txs.append(tx)
+        pad_rows = batch_b - take
+        if pad_rows:
+            ks.extend([jnp.zeros_like(ks[0])] * pad_rows)
+            vs.extend([jnp.zeros_like(vs[0])] * pad_rows)
+            lens.extend([0] * pad_rows)
+            txs.extend([np.zeros_like(txs[0])] * pad_rows)
+        preds = _decode_batch(
+            self.params, self.gcfg, self.num_options,
+            jnp.stack(ks), jnp.stack(vs),
+            jnp.asarray(lens, jnp.int32), jnp.asarray(np.stack(txs)))
+        preds = np.asarray(jax.block_until_ready(preds))
+
+        finished = self.now()
+        batch_index = len(self.batches)
+        self.batches.append(BatchRecord(
+            rids=tuple(r.rid for r in reqs), batch_pad=batch_b,
+            ctx_bucket=ctx_b, tgt_bucket=tgt_b, hits=tuple(hits)))
+        out = []
+        for i, r in enumerate(reqs):
+            rows = r.tgt_x.shape[0] // self.num_options
+            out.append(Completed(
+                rid=r.rid, pred=preds[i, :rows], cache_hit=hits[i],
+                arrival=r.arrival, finished=finished,
+                batch_index=batch_index))
+            self.stats.completed += 1
+        return out
+
+    # -- open-loop trace driver ----------------------------------------
+    def run_trace(self, requests: Sequence[Request],
+                  *, reset: bool = True,
+                  clear_cache: bool = False) -> List[Completed]:
+        """Drive a full arrival trace: requests are admitted when the
+        engine clock passes their ``arrival`` (open loop — a slow engine
+        builds queue depth and, past ``max_queue``, rejections), and the
+        engine steps whenever work is queued. Returns completions in
+        retirement order; rejected rids are in ``stats.rejected``."""
+        if reset:
+            self.reset(clear_cache=clear_cache)
+        trace = sorted(requests, key=lambda r: r.arrival)
+        results: List[Completed] = []
+        i = 0
+        while i < len(trace) or self._queue:
+            now = self.now()
+            while i < len(trace) and trace[i].arrival <= now:
+                self.submit(trace[i])
+                i += 1
+            if not self._queue:
+                if i >= len(trace):
+                    break
+                time.sleep(min(5e-4, max(0.0, trace[i].arrival - now)))
+                continue
+            results.extend(self.step())
+        return results
+
+
+# ---------------------------------------------------------------------------
+# synthetic load generation + latency summaries (shared by the serve CLI,
+# bench_serve.py, and the tests)
+# ---------------------------------------------------------------------------
+def make_request_trace(data, groups, *, num_requests: int,
+                       hit_ratio: float = 0.0,
+                       num_context: Tuple[int, int] = (6, 16),
+                       num_target: Tuple[int, int] = (2, 8),
+                       rate: Optional[float] = None,
+                       seed: int = 0) -> List[Request]:
+    """Build a request trace against a ``SurveyData`` population.
+
+    ``hit_ratio`` controls prefix-cache pressure: the trace draws
+    ``ceil((1 - hit_ratio) * N)`` unique (group, context) prefixes and
+    spreads the remaining requests across them (fresh targets each), so
+    the realized steady-state hit rate is ``hit_ratio`` regardless of
+    arrival order. ``num_context``/``num_target`` are inclusive ranges
+    of QUESTIONS (points are questions x num_options) sampled per
+    prefix / per request — the ragged-length workload the bucketed
+    batcher exists for. ``rate`` (requests/sec) spaces arrivals
+    uniformly; None means all arrive at t=0 (saturation)."""
+    rng = np.random.default_rng(seed)
+    phi = np.asarray(data.phi)
+    prefs = np.asarray(data.prefs)
+    mask = np.asarray(data.mask)
+    a = data.num_options
+    d = phi.shape[-1]
+
+    n_unique = max(1, int(np.ceil((1.0 - hit_ratio) * num_requests)))
+    prefixes = []
+    for u in range(n_unique):
+        g = int(groups[rng.integers(len(groups))])
+        answered = np.flatnonzero(mask[g])
+        m = int(rng.integers(num_context[0], num_context[1] + 1))
+        m = min(m, max(1, len(answered) - num_target[1]))
+        ctx_q = rng.choice(answered, size=m, replace=False)
+        ctx_x = phi[ctx_q].reshape(-1, d)
+        ctx_y = prefs[g, ctx_q].reshape(-1)
+        rest = np.setdiff1d(answered, ctx_q)
+        prefixes.append((g, ctx_x, ctx_y, rest, u))
+
+    assign = np.concatenate([
+        np.arange(n_unique),
+        rng.integers(0, n_unique, size=num_requests - n_unique)])
+    rng.shuffle(assign)
+    out = []
+    for rid in range(num_requests):
+        g, ctx_x, ctx_y, rest, u = prefixes[int(assign[rid])]
+        t = int(rng.integers(num_target[0], num_target[1] + 1))
+        tgt_q = rng.choice(rest, size=min(t, len(rest)), replace=False)
+        tgt_x = phi[tgt_q].reshape(-1, d)
+        arrival = 0.0 if rate is None else rid / rate
+        out.append(Request(
+            rid=rid, ctx_x=ctx_x.astype(np.float32),
+            ctx_y=ctx_y.astype(np.float32),
+            tgt_x=tgt_x.astype(np.float32),
+            prefix_key=("ctx", g, u), arrival=arrival,
+            meta={"group": g, "tgt_q": tgt_q}))
+    return out
+
+
+def latency_summary(results: Sequence[Completed],
+                    wall_seconds: float) -> dict:
+    """p50/p99 latency (ms) + throughput over a completed trace."""
+    if not results:
+        return {"completed": 0}
+    lat = np.asarray([r.latency for r in results]) * 1e3
+    return {
+        "completed": len(results),
+        "p50_ms": float(np.percentile(lat, 50)),
+        "p95_ms": float(np.percentile(lat, 95)),
+        "p99_ms": float(np.percentile(lat, 99)),
+        "mean_ms": float(lat.mean()),
+        "max_ms": float(lat.max()),
+        "qps": float(len(results) / max(wall_seconds, 1e-9)),
+        "hit_rate": float(np.mean([r.cache_hit for r in results])),
+    }

@@ -1,15 +1,10 @@
 # Pallas TPU kernels for the compute hot spots: flash attention (backbone),
 # GPO neural-process attention (the paper's module; differentiable via a
 # flash-style custom VJP on the banded grid, DESIGN.md §8), Mamba2 SSD
-# scan, and the server-aggregation reductions (Eq. 3 FedAvg plus the
+# scan, the server-aggregation reductions (Eq. 3 FedAvg plus the
 # generalized delta-moment, rank-trim, DP-clip, and compressed-transport
-# kernels, DESIGN.md §7, §9, §10).
-# Load the deprecated re-export module FIRST so its one-time parent-
-# attribute binding happens now; the ops import below then rebinds the
-# ``fedavg_reduce`` package attribute to the jit'd wrapper FUNCTION (the
-# public API), and later `import repro.kernels.fedavg_reduce` hits
-# sys.modules without re-shadowing it.
-from repro.kernels import fedavg_reduce as _fedavg_reduce_module  # noqa: F401,E501
+# kernels, DESIGN.md §7, §9, §10), and the int8 weight-only inference
+# matmul for the serving engine (DESIGN.md §12).
 from repro.kernels.ops import (  # noqa: F401
     agg_clip_reduce,
     agg_momentum_reduce,
@@ -20,6 +15,12 @@ from repro.kernels.ops import (  # noqa: F401
     fedavg_reduce_tree,
     flash_attention,
     gpo_attention,
+    int8_matmul,
     ssd_scan,
+)
+from repro.kernels.quant_matmul import (  # noqa: F401
+    QuantizedLinear,
+    dequantize_linear,
+    quantize_linear,
 )
 from repro.kernels import ref  # noqa: F401

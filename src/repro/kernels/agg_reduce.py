@@ -3,8 +3,8 @@
 One kernel family, one oracle module (kernels/ref.py): the seed's
 ``fedavg_reduce`` (Eq. 3 as a weighted reduction over the flattened
 (C, P) client-delta matrix — ``fedavg_reduce_flat`` below, formerly its
-own ``kernels/fedavg_reduce.py``, kept there as a deprecation
-re-export) generalizes into the aggregation kernels:
+own ``kernels/fedavg_reduce.py`` module) generalizes into the
+aggregation kernels:
 
 1. ``momentum_reduce_flat`` — the weighted delta-moment kernel: one pass
    over the (C, bp) tile produces BOTH the weighted first moment

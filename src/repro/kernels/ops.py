@@ -22,6 +22,7 @@ from repro.kernels.agg_reduce import (
 from repro.kernels.backend import interpret_default as _interpret_default
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.gpo_attention import gpo_attention_hsd
+from repro.kernels.quant_matmul import int8_matmul_flat
 from repro.kernels.ssd_scan import ssd_scan_bhsp
 from repro.utils.pytree import (
     tree_index,
@@ -195,6 +196,19 @@ def agg_trimmed_reduce(stacked, weights, *, trim: int, block: int = 2048,
         interpret = _interpret_default()
     return trimmed_reduce_flat(stacked, weights, trim=trim, block=block,
                                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def int8_matmul(x, q, scale, *, bm: int = 128, bn: int = 128,
+                interpret: bool | None = None):
+    """x (M, K) f32 activations, q (K, N) int8 weight, scale (N,) f32
+    per-output-channel -> (M, N) f32: the weight-only int8 inference
+    matmul (DESIGN.md §12). The int8 tile is what streams from HBM —
+    4x fewer weight bytes than f32 at identical output up to the f32
+    accumulation order."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return int8_matmul_flat(x, q, scale, bm=bm, bn=bn, interpret=interpret)
 
 
 def fedavg_reduce_tree(stacked_tree, weights, *, interpret: bool | None = None):

@@ -1,0 +1,112 @@
+"""Int8 weight-only inference matmul (DESIGN.md §12).
+
+Serving reuses the §10 symmetric-quantization contract (127 levels,
+floored scale — the constants are imported from ``agg_reduce`` so the
+transport codec and the inference path cannot drift) but flips the
+granularity: transport quantizes per *client row* of the (C, P) delta
+matrix, inference quantizes each dense weight per *output channel*
+(scale_n = max_k |W[k, n]| / 127), which keeps the worst-case relative
+weight error at 1/254 per column regardless of how differently scaled
+the columns are.
+
+The kernel computes  out = (x @ deq(q)) = (x @ q_f32) * scale  with the
+scale applied AFTER the reduction (deq is a per-column constant, so it
+commutes with the sum over k) — the int8 weight tile is what streams
+from HBM, at a quarter of the f32 bytes. Weights dominate the serving
+working set at small batch (the activation tile is (bm, K) with bm ≤
+the padded batch of target points), so weight bytes are the roofline;
+the matmul itself runs on the MXU in f32 after an in-register upcast.
+
+Grid: (M/bm, N/bn); each step reads the full K axis (GPO's K ≤ d_ff, a
+few hundred — one VMEM tile), so no cross-step accumulator is needed.
+Oracle: ``kernels/ref.py::ref_int8_matmul``; interpret-mode fallback per
+``kernels/backend.py`` like every other kernel family.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.agg_reduce import INT8_LEVELS, _SCALE_FLOOR
+from repro.kernels.backend import interpret_default
+
+
+class QuantizedLinear(NamedTuple):
+    """An int8-quantized dense weight: ``q`` int8 with the original
+    weight's shape (..., K, N), ``scale`` f32 (..., N) per-output-channel
+    dequantization scales. Leading dims (the stacked-layer axis) are
+    carried through, so ``lax.scan`` over stacked GPO layers slices a
+    per-layer (K, N) / (N,) pair exactly like a plain weight."""
+
+    q: jnp.ndarray
+    scale: jnp.ndarray
+
+
+def quantize_linear(w: jnp.ndarray) -> QuantizedLinear:
+    """Per-output-channel symmetric int8 quantization of a dense weight
+    (..., K, N). Round-to-nearest: weights are load-time constants, so
+    the stochastic rounding the §10 transport codec uses (unbiasedness
+    across rounds) buys nothing here and would make serving depend on a
+    key."""
+    x = w.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-2) / INT8_LEVELS,
+                        _SCALE_FLOOR)
+    q = jnp.clip(jnp.round(x / scale[..., None, :]),
+                 -INT8_LEVELS, INT8_LEVELS)
+    return QuantizedLinear(q=q.astype(jnp.int8), scale=scale)
+
+
+def dequantize_linear(ql: QuantizedLinear) -> jnp.ndarray:
+    """(..., K, N) f32 reconstruction — the value the kernel's fused
+    matmul is algebraically equal to multiplying by."""
+    return ql.q.astype(jnp.float32) * ql.scale[..., None, :]
+
+
+def _int8_matmul_kernel(x_ref, q_ref, s_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # (bm, K)
+    w = q_ref[...].astype(jnp.float32)  # (K, bn) upcast in-register
+    s = s_ref[...].astype(jnp.float32)  # (1, bn)
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    o_ref[...] = (acc * s).astype(o_ref.dtype)
+
+
+def int8_matmul_flat(x: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray,
+                     *, bm: int = 128, bn: int = 128,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """x (M, K) f32, q (K, N) int8, scale (N,) f32 -> (M, N) f32:
+    the weight-only-quantized dense layer. M and N pad to the block
+    grid; K pads to the sublane multiple with zero rows (exact: they
+    contribute 0 to the dot, and the matching scale pads are sliced
+    off)."""
+    if interpret is None:
+        interpret = interpret_default()
+    m, k = x.shape
+    k2, n = q.shape
+    if k != k2 or scale.shape != (n,):
+        raise ValueError(f"int8_matmul shapes: x {x.shape}, q {q.shape}, "
+                         f"scale {scale.shape}")
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(8, n))
+    pad_m, pad_n, pad_k = (-m) % bm, (-n) % bn, (-k) % 8
+    xf = jnp.pad(x.astype(jnp.float32), ((0, pad_m), (0, pad_k)))
+    qp = jnp.pad(q, ((0, pad_k), (0, pad_n)))
+    sp = jnp.pad(scale.astype(jnp.float32), (0, pad_n)).reshape(1, -1)
+    kp = k + pad_k
+
+    out = pl.pallas_call(
+        _int8_matmul_kernel,
+        grid=(xf.shape[0] // bm, sp.shape[1] // bn),
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xf.shape[0], sp.shape[1]),
+                                       jnp.float32),
+        interpret=interpret,
+    )(xf, qp, sp)
+    return out[:m, :n]

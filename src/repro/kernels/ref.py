@@ -169,6 +169,17 @@ def ref_topk_reduce(stacked, weights, *, frac):
     return out, x - t
 
 
+def ref_int8_matmul(x, q, scale):
+    """Weight-only-quantized dense layer written out as dequantize-then-
+    matmul: x (M, K) f32, q (K, N) int8, scale (N,) f32 per-output-
+    channel -> (M, N) f32. The fused kernel applies the scale after the
+    reduction instead (a per-column constant commutes with the sum over
+    k) — algebraically identical; this oracle materializes the f32
+    weight so the two orderings are genuinely independent."""
+    w = q.astype(jnp.float32) * scale.astype(jnp.float32)[None, :]
+    return x.astype(jnp.float32) @ w
+
+
 def ref_trimmed_flat(stacked, weights, *, trim):
     """Rank-trimmed weighted mean via an explicit stable argsort: sort
     each coordinate's clients (ties by client index), drop ``trim`` at

@@ -1,15 +1,19 @@
 """Serving launcher: batched greedy decoding against a prefilled KV cache,
-or batched GPO preference prediction (the paper's inference product).
+or the GPO preference-serving engine (the paper's inference product).
 
 The GPO path trains once and checkpoints the predictor (repro.checkpoint);
 ``--restore`` serves the latest checkpoint from ``--ckpt-dir`` instead of
 retraining, which is the actual serving contract — the trained preference
-model is the product, not the training loop.
+model is the product, not the training loop. Requests flow through
+``core.serving.PreferenceServer`` (DESIGN.md §12): admission-controlled
+queue, bucketed continuous batching, LRU prefix/KV cache over shared ICL
+contexts, and optional int8 weights (``--int8``).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
       --prompt-len 16 --gen-len 16 --batch 4
-  PYTHONPATH=src python -m repro.launch.serve --gpo --batch 8
-  PYTHONPATH=src python -m repro.launch.serve --gpo --restore --batch 8
+  PYTHONPATH=src python -m repro.launch.serve --gpo --requests 64
+  PYTHONPATH=src python -m repro.launch.serve --gpo --restore --int8 \
+      --requests 64 --hit-ratio 0.75
 """
 from __future__ import annotations
 
@@ -25,15 +29,24 @@ from repro.checkpoint import (
     restore_checkpoint,
     save_checkpoint,
 )
-from repro.configs import AggConfig, FedConfig, GPOConfig, get_arch, smoke_variant
+from repro.configs import (
+    AggConfig,
+    FedConfig,
+    GPOConfig,
+    ServeConfig,
+    get_arch,
+    smoke_variant,
+)
 from repro.core import (
     FederatedGPO,
+    PreferenceServer,
     greedy_decode,
     init_gpo_params,
+    latency_summary,
     make_prefill_step,
-    predict_preferences,
+    make_request_trace,
 )
-from repro.data import SurveyConfig, make_survey_data, sample_icl_batch, split_groups
+from repro.data import SurveyConfig, make_survey_data, split_groups
 from repro.models import init_params
 
 
@@ -64,25 +77,42 @@ def serve_lm(args) -> None:
         print(f"  seq{i}: {toks[i].tolist()}")
 
 
+def _restore_params(ckpt_dir: str, gcfg: GPOConfig, seed: int) -> dict:
+    """Load the latest GPO checkpoint or fail with an actionable error
+    (never a raw stack trace): missing checkpoint, torn/corrupt file, and
+    architecture mismatch each get their own message."""
+    path = latest_checkpoint(ckpt_dir)
+    if path is None:
+        raise SystemExit(
+            f"--restore: no checkpoint under {ckpt_dir!r}; run "
+            "once without --restore to train and save one")
+    like = init_gpo_params(gcfg, jax.random.PRNGKey(seed))
+    try:
+        params = restore_checkpoint(path, like)
+    except (OSError, ValueError, KeyError) as e:
+        raise SystemExit(
+            f"--restore: checkpoint {path!r} is unreadable or does not "
+            f"match the GPO architecture ({type(e).__name__}: {e}); "
+            "delete it and retrain, or point --ckpt-dir at a checkpoint "
+            "saved by this launcher") from e
+    print(f"restored GPO predictor from {path}")
+    return params
+
+
 def serve_gpo(args) -> None:
-    """Batched preference prediction for unseen groups — the aligned-LLM
-    reward-model serving path the paper proposes (§5). Trains once and
-    checkpoints; ``--restore`` loads the latest checkpoint instead."""
+    """Preference serving for unseen groups — the aligned-LLM reward-model
+    path the paper proposes (§5), through the multi-tenant engine
+    (DESIGN.md §12). Trains once and checkpoints; ``--restore`` loads the
+    latest checkpoint instead."""
     data = make_survey_data(SurveyConfig(seed=args.seed))
     tr, ev = split_groups(data, seed=args.seed)
     gcfg = GPOConfig(d_embed=data.phi.shape[-1])
-    fcfg = FedConfig(num_clients=len(tr), rounds=args.rounds, seed=args.seed,
-                     agg=AggConfig(name=args.agg, prox_mu=args.prox_mu))
     if args.restore:
-        path = latest_checkpoint(args.ckpt_dir)
-        if path is None:
-            raise SystemExit(
-                f"--restore: no checkpoint under {args.ckpt_dir!r}; run "
-                "once without --restore to train and save one")
-        like = init_gpo_params(gcfg, jax.random.PRNGKey(args.seed))
-        params = restore_checkpoint(path, like)
-        print(f"restored GPO predictor from {path}")
+        params = _restore_params(args.ckpt_dir, gcfg, args.seed)
     else:
+        fcfg = FedConfig(num_clients=len(tr), rounds=args.rounds,
+                         seed=args.seed,
+                         agg=AggConfig(name=args.agg, prox_mu=args.prox_mu))
         fed = FederatedGPO(gcfg, fcfg, data, tr, ev)
         print(f"training federated GPO for {args.rounds} rounds ...")
         fed.run(rounds=args.rounds)
@@ -93,40 +123,41 @@ def serve_gpo(args) -> None:
                       "agg": args.agg, "d_embed": gcfg.d_embed})
         print(f"saved GPO predictor to {path} (serve with --restore)")
 
-    @jax.jit
-    def predict_batch(keys, groups):
-        def one(k, g):
-            batch = sample_icl_batch(k, data, g, fcfg.num_context,
-                                     fcfg.num_target)
-            pred = predict_preferences(params, gcfg, batch.ctx_x,
-                                       batch.ctx_y, batch.tgt_x,
-                                       data.num_options)
-            truth = batch.tgt_y.reshape(-1, data.num_options)
-            return pred, truth
-
-        return jax.vmap(one)(keys, groups)
-
-    key = jax.random.PRNGKey(args.seed + 7)
-    groups = jnp.asarray(
-        np.resize(ev, args.batch), jnp.int32)
-    keys = jax.random.split(key, args.batch)
-    # warm up before timing: the first call pays the JIT trace+compile,
-    # which is not per-request serving latency. Report both separately.
+    scfg = ServeConfig(max_batch=args.max_batch,
+                       int8_weights=args.int8)
+    server = PreferenceServer(params, gcfg, scfg,
+                              num_options=data.num_options)
+    trace = make_request_trace(
+        data, list(ev), num_requests=args.requests,
+        hit_ratio=args.hit_ratio, rate=args.rate, seed=args.seed + 7)
+    # warm up the jit shape family before timing: compile time is a
+    # one-time cost, not per-request serving latency.
     t0 = time.time()
-    jax.block_until_ready(predict_batch(keys, groups))
+    server.run_trace(trace[: min(len(trace), scfg.max_batch)])
     t_compile = time.time() - t0
+    server.reset(clear_cache=True)
     t0 = time.time()
-    pred, truth = jax.block_until_ready(predict_batch(keys, groups))
-    dt = time.time() - t0
+    results = server.run_trace(trace)
+    wall = time.time() - t0
+    summary = latency_summary(results, wall)
+    mode = "int8" if args.int8 else "f32"
+    print(f"compile+first-call: {t_compile*1e3:.1f}ms (one-time)")
+    print(f"served {summary['completed']}/{args.requests} requests "
+          f"({mode}) in {wall*1e3:.1f}ms over {len(server.batches)} "
+          f"batches; rejected={server.stats.rejected}")
+    print(f"  p50={summary['p50_ms']:.2f}ms p99={summary['p99_ms']:.2f}ms "
+          f"qps={summary['qps']:.1f} "
+          f"prefix-cache hit-rate={summary['hit_rate']:.2f}")
     from repro.core.fairness import alignment_score
 
-    scores = jax.vmap(alignment_score)(pred, truth)
-    print(f"compile+first-call: {t_compile*1e3:.1f}ms (one-time)")
-    print(f"served {args.batch} group-preference requests in {dt*1e3:.1f}ms "
-          f"steady-state ({dt*1e3/args.batch:.2f}ms/request)")
-    for i in range(min(args.batch, 4)):
-        print(f"  group {int(groups[i])}: AS={float(scores[i]):.4f} "
-              f"pred[0]={np.round(np.asarray(pred[i][0]), 3).tolist()}")
+    for c in results[: min(4, len(results))]:
+        req = trace[c.rid]
+        truth = np.asarray(data.prefs)[req.meta["group"], req.meta["tgt_q"]]
+        score = float(alignment_score(jnp.asarray(c.pred),
+                                      jnp.asarray(truth)))
+        print(f"  rid={c.rid} group={req.meta['group']} AS={score:.4f} "
+              f"hit={c.cache_hit} "
+              f"pred[0]={np.round(c.pred[0], 3).tolist()}")
 
 
 def main() -> None:
@@ -149,6 +180,20 @@ def main() -> None:
     ap.add_argument("--prox-mu", type=float, default=0.0,
                     help="FedProx proximal coefficient (required > 0 for "
                          "--agg fedprox to differ from fedavg)")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="gpo mode: number of requests in the load trace")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="gpo mode: engine batch cap per decode dispatch")
+    ap.add_argument("--hit-ratio", type=float, default=0.5,
+                    help="gpo mode: fraction of requests sharing an "
+                         "already-seen ICL prefix (prefix-cache pressure)")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="gpo mode: offered request rate in req/s "
+                         "(default: all arrive at t=0, saturation)")
+    ap.add_argument("--int8", action="store_true",
+                    help="gpo mode: quantize weights to int8 at load "
+                         "time and serve through the fused int8 kernel "
+                         "(DESIGN.md §12)")
     args = ap.parse_args()
     if args.gpo:
         serve_gpo(args)

@@ -1,0 +1,385 @@
+"""Serving-engine invariants (DESIGN.md §12): prefix-split exactness,
+ragged-batch equivalence, cache hit==miss numerics, int8 tolerance,
+deterministic scheduling, admission, and the checkpoint restore contract.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (
+    restore_checkpoint,
+    restore_checkpoint_quantized,
+    save_checkpoint,
+)
+from repro.configs import FedConfig, GPOConfig, ServeConfig
+from repro.core import (
+    FederatedGPO,
+    GPOPrefix,
+    PreferenceServer,
+    Request,
+    gpo_apply,
+    gpo_decode,
+    gpo_prefill,
+    init_gpo_params,
+    make_request_trace,
+    predict_preferences,
+    quantize_gpo_params,
+)
+from repro.data import SurveyConfig, make_survey_data, split_groups
+from repro.kernels import (
+    QuantizedLinear,
+    dequantize_linear,
+    int8_matmul,
+    quantize_linear,
+)
+from repro.kernels.ref import ref_int8_matmul
+
+CFG = GPOConfig(d_embed=16, d_model=32, num_layers=2, num_heads=4, d_ff=64)
+SCFG = ServeConfig(max_batch=4, batch_buckets=(1, 2, 4),
+                   ctx_buckets=(20, 40), tgt_buckets=(10, 20),
+                   cache_entries=16)
+
+
+def _params(key=0, scale=1.0):
+    p = init_gpo_params(CFG, jax.random.PRNGKey(key))
+    return jax.tree.map(lambda a: a * scale, p) if scale != 1.0 else p
+
+
+def _icl(key, m=6, t=10):
+    kx, ky, kt = jax.random.split(jax.random.PRNGKey(key), 3)
+    ctx_x = jax.random.normal(kx, (m, CFG.d_embed))
+    ctx_y = jax.random.uniform(ky, (m,))
+    tgt_x = jax.random.normal(kt, (t, CFG.d_embed))
+    return ctx_x, ctx_y, tgt_x
+
+
+# ---------------------------------------------------------------------------
+# prefix split
+# ---------------------------------------------------------------------------
+def test_prefill_decode_matches_monolithic():
+    """The neural-process mask makes the context encoding target-
+    independent, so prefill+decode must reproduce gpo_apply."""
+    params = _params(0)
+    ctx_x, ctx_y, tgt_x = _icl(1)
+    mu_ref, _ = gpo_apply(params, CFG, ctx_x, ctx_y, tgt_x)
+    prefix = gpo_prefill(params, CFG, ctx_x, ctx_y)
+    mu_split, _ = gpo_decode(params, CFG, prefix, tgt_x)
+    assert prefix.k.shape == (CFG.num_layers, 6, CFG.num_heads,
+                              CFG.d_model // CFG.num_heads)
+    np.testing.assert_allclose(np.asarray(mu_split), np.asarray(mu_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_prefill_padded_ctx_len_equivalence():
+    """Padding context rows past ctx_len must not change predictions —
+    the masked padded keys never participate as attention keys."""
+    params = _params(0)
+    ctx_x, ctx_y, tgt_x = _icl(2, m=6)
+    prefix = gpo_prefill(params, CFG, ctx_x, ctx_y)
+    mu_ref, _ = gpo_decode(params, CFG, prefix, tgt_x)
+    pad_x = jnp.concatenate([ctx_x, jnp.full((5, CFG.d_embed), 7.0)])
+    pad_y = jnp.concatenate([ctx_y, jnp.full((5,), -3.0)])
+    prefix_p = gpo_prefill(params, CFG, pad_x, pad_y, ctx_len=6)
+    mu_pad, _ = gpo_decode(params, CFG, prefix_p, tgt_x, ctx_len=6)
+    np.testing.assert_allclose(np.asarray(mu_pad), np.asarray(mu_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_decode_matches_monolithic_under_vmap():
+    params = _params(0)
+    batches = [_icl(k, m=6, t=10) for k in range(3, 6)]
+    cx = jnp.stack([b[0] for b in batches])
+    cy = jnp.stack([b[1] for b in batches])
+    tx = jnp.stack([b[2] for b in batches])
+    prefix = jax.vmap(lambda a, b: gpo_prefill(params, CFG, a, b))(cx, cy)
+    mu = jax.vmap(lambda k, v, t: gpo_decode(
+        params, CFG, GPOPrefix(k=k, v=v), t)[0])(prefix.k, prefix.v, tx)
+    for i, (a, b, t) in enumerate(batches):
+        ref, _ = gpo_apply(params, CFG, a, b, t)
+        np.testing.assert_allclose(np.asarray(mu[i]), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization + kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [(7, 16, 5), (64, 128, 64),
+                                   (130, 200, 257), (1, 8, 1)])
+def test_int8_matmul_matches_oracle(m, k, n):
+    kx, kw = jax.random.split(jax.random.PRNGKey(m * 1000 + n), 2)
+    x = jax.random.normal(kx, (m, k))
+    ql = quantize_linear(jax.random.normal(kw, (k, n)))
+    got = int8_matmul(x, ql.q, ql.scale)
+    want = ref_int8_matmul(x, ql.q, ql.scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quantize_linear_roundtrip_error_bound():
+    """Symmetric per-output-channel int8: dequant error per element is at
+    most half a quantization step of that column."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (96, 48))
+    ql = quantize_linear(w)
+    assert ql.q.dtype == jnp.int8 and ql.scale.shape == (48,)
+    err = np.abs(np.asarray(dequantize_linear(ql)) - np.asarray(w))
+    step = np.asarray(ql.scale)[None, :]
+    assert (err <= 0.5 * step + 1e-7).all()
+
+
+def test_quantize_gpo_params_structure():
+    """Only dense matmul weights become QuantizedLinear; stacked norm
+    scales stay f32 and the tree still drives gpo_apply (via _mm)."""
+    params = _params(0)
+    qp = quantize_gpo_params(params)
+    assert isinstance(qp["in_proj"], QuantizedLinear)
+    assert isinstance(qp["head"], QuantizedLinear)
+    assert isinstance(qp["layers"].wq, QuantizedLinear)
+    assert qp["layers"].wq.q.shape[0] == CFG.num_layers  # stacked axis
+    assert qp["layers"].ln1.dtype == jnp.float32
+    assert not isinstance(qp["layers"].ln1, QuantizedLinear)
+    assert qp["final_norm"].dtype == jnp.float32
+    ctx_x, ctx_y, tgt_x = _icl(7)
+    mu_q, _ = gpo_apply(qp, CFG, ctx_x, ctx_y, tgt_x)
+    mu_f, _ = gpo_apply(params, CFG, ctx_x, ctx_y, tgt_x)
+    assert np.isfinite(np.asarray(mu_q)).all()
+    # int8 weights perturb, but do not destroy, the f32 prediction
+    assert 0.0 < np.abs(np.asarray(mu_q) - np.asarray(mu_f)).max() < 0.25
+
+
+def test_int8_predictions_within_tolerance():
+    """The documented serving tolerance (DESIGN.md §12): int8 preference
+    rows stay within 0.05 max-abs of f32 on normalized outputs."""
+    params = _params(0)
+    ctx_x, ctx_y, tgt_x = _icl(8, m=6, t=10)
+    f32 = predict_preferences(params, CFG, ctx_x, ctx_y, tgt_x,
+                              num_options=5)
+    q = predict_preferences(quantize_gpo_params(params), CFG, ctx_x,
+                            ctx_y, tgt_x, num_options=5)
+    rows = np.asarray(q)
+    np.testing.assert_allclose(rows.sum(-1), 1.0, rtol=1e-5)
+    assert np.abs(rows - np.asarray(f32)).max() < 0.05
+
+
+# ---------------------------------------------------------------------------
+# engine: batching, cache, scheduling, admission
+# ---------------------------------------------------------------------------
+def _request(rid, key, m=6, t=10, prefix_key=None):
+    ctx_x, ctx_y, tgt_x = _icl(key, m=m, t=t)
+    return Request(rid=rid, ctx_x=np.asarray(ctx_x),
+                   ctx_y=np.asarray(ctx_y), tgt_x=np.asarray(tgt_x),
+                   prefix_key=prefix_key)
+
+
+def test_ragged_batch_equals_one_at_a_time():
+    """A fused ragged batch must produce the same rows as serving each
+    request alone (padding + bucketing are numerically invisible)."""
+    params = _params(0, scale=2.0)  # avoid clip-saturated uniform rows
+    reqs = [_request(0, 10, m=6, t=10), _request(1, 11, m=14, t=5),
+            _request(2, 12, m=3, t=8)]
+    srv = PreferenceServer(params, CFG, SCFG, num_options=5)
+    for r in reqs:
+        srv.submit(r)
+    batched = {c.rid: c.pred for c in srv.step()}
+    assert len(srv.batches) == 1 and srv.batches[0].batch_pad == 4
+    solo_cfg = ServeConfig(max_batch=1, batch_buckets=(1,),
+                           ctx_buckets=(20, 40), tgt_buckets=(10, 20),
+                           cache_entries=0)
+    for r in reqs:
+        solo = PreferenceServer(params, CFG, solo_cfg, num_options=5)
+        solo.submit(r)
+        np.testing.assert_allclose(solo.step()[0].pred, batched[r.rid],
+                                   rtol=1e-5, atol=1e-6)
+        assert batched[r.rid].shape == (r.tgt_x.shape[0] // 5, 5)
+
+
+def test_engine_matches_predict_preferences():
+    params = _params(0, scale=2.0)
+    r = _request(0, 20)
+    srv = PreferenceServer(params, CFG, SCFG, num_options=5)
+    srv.submit(r)
+    pred = srv.step()[0].pred
+    ref = predict_preferences(params, CFG, r.ctx_x, r.ctx_y, r.tgt_x,
+                              num_options=5)
+    np.testing.assert_allclose(pred, np.asarray(ref), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_prefix_cache_hit_bit_equal_to_miss():
+    """The cache stores the prefill output at the request's own ctx
+    bucket, so a hit replays the identical decode inputs: bit-equal."""
+    params = _params(0, scale=2.0)
+    srv = PreferenceServer(params, CFG, SCFG, num_options=5)
+    a = _request(0, 30, prefix_key="g7")
+    b = _request(1, 30, prefix_key="g7")  # same context, fresh arrival
+    srv.submit(a)
+    cold = srv.step()[0]
+    srv.submit(b)
+    warm = srv.step()[0]
+    assert not cold.cache_hit and warm.cache_hit
+    assert srv.stats.cache_hits == 1 and srv.stats.cache_misses == 1
+    assert srv.stats.prefills == 1  # the hit skipped prefill entirely
+    assert np.array_equal(cold.pred, warm.pred)
+
+
+def test_prefix_cache_hit_independent_of_batch_composition():
+    """Prefill-at-own-bucket: the cached entry (and thus a hit's result)
+    must not depend on which other requests shared the cold batch."""
+    params = _params(0, scale=2.0)
+    probe = _request(99, 40, m=6, t=10, prefix_key="shared")
+
+    def serve_after_cold_batch(extra_ctx_len):
+        srv = PreferenceServer(params, CFG, SCFG, num_options=5)
+        srv.submit(_request(0, 41, m=6, t=10, prefix_key="shared"))
+        srv.submit(_request(1, 42, m=extra_ctx_len, t=5))
+        srv.step()
+        srv.submit(probe)
+        return srv.step()[0]
+
+    small = serve_after_cold_batch(3)   # cold batch padded to ctx 20
+    large = serve_after_cold_batch(15)  # cold batch padded to ctx 20 too
+    assert small.cache_hit and large.cache_hit
+    assert np.array_equal(small.pred, large.pred)
+
+
+def test_cache_lru_eviction():
+    cfg = ServeConfig(max_batch=1, batch_buckets=(1,), ctx_buckets=(20,),
+                      tgt_buckets=(10, 20), cache_entries=2)
+    srv = PreferenceServer(_params(0), CFG, cfg, num_options=5)
+    for i, key in enumerate(["a", "b", "c"]):
+        srv.submit(_request(i, 50 + i, prefix_key=key))
+        srv.step()
+    assert srv.stats.evictions == 1
+    srv.submit(_request(3, 50, prefix_key="a"))  # evicted -> miss again
+    srv.step()
+    assert srv.stats.cache_hits == 0 and srv.stats.cache_misses == 4
+
+
+def test_scheduler_deterministic_batch_composition():
+    """A fixed arrival trace yields a fixed batch composition — FIFO
+    order, bucket choices, pad sizes, and hit flags are all replayed."""
+    data = make_survey_data(SurveyConfig(num_groups=6, num_questions=40))
+    trace = make_request_trace(data, list(range(6)), num_requests=13,
+                               hit_ratio=0.4, seed=5)
+    params = init_gpo_params(GPOConfig(d_embed=data.phi.shape[-1]),
+                             jax.random.PRNGKey(0))
+
+    def run():
+        srv = PreferenceServer(
+            params, GPOConfig(d_embed=data.phi.shape[-1]),
+            ServeConfig(max_batch=4, batch_buckets=(1, 2, 4),
+                        ctx_buckets=(40, 80), tgt_buckets=(20, 40)),
+            num_options=data.num_options)
+        srv.run_trace(trace)
+        return srv.batches
+
+    first, second = run(), run()
+    assert first == second
+    assert [b.rids for b in first] == [
+        (0, 1, 2, 3), (4, 5, 6, 7), (8, 9, 10, 11), (12,)]
+    assert first[-1].batch_pad == 1
+
+
+def test_admission_rejects_when_queue_full():
+    cfg = ServeConfig(max_queue=2, ctx_buckets=(20,), tgt_buckets=(10,))
+    srv = PreferenceServer(_params(0), CFG, cfg, num_options=5)
+    results = [srv.submit(_request(i, 60 + i)) for i in range(5)]
+    assert results == [True, True, False, False, False]
+    assert srv.stats.rejected == 3 and srv.queue_depth == 2
+    srv.step()  # drains the queue, admitting again
+    assert srv.submit(_request(9, 69))
+
+
+def test_request_trace_hit_ratio_and_shapes():
+    data = make_survey_data(SurveyConfig(num_groups=6, num_questions=40))
+    trace = make_request_trace(data, [0, 1, 2], num_requests=20,
+                               hit_ratio=0.75, rate=100.0, seed=1)
+    assert len(trace) == 20
+    assert len({r.prefix_key for r in trace}) == 5  # ceil(0.25 * 20)
+    for r in trace:
+        assert r.ctx_x.shape[0] % data.num_options == 0
+        assert r.tgt_x.shape[0] % data.num_options == 0
+        assert r.ctx_x.shape[0] == r.ctx_y.shape[0]
+    arrivals = [r.arrival for r in trace]
+    assert arrivals == sorted(arrivals) and arrivals[1] == pytest.approx(0.01)
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(ctx_buckets=()).validate()
+    with pytest.raises(ValueError):
+        ServeConfig(ctx_buckets=(40, 40)).validate()
+    with pytest.raises(ValueError):
+        ServeConfig(max_batch=16, batch_buckets=(1, 8)).validate()
+    with pytest.raises(ValueError):
+        # tgt bucket not a multiple of num_options
+        PreferenceServer(_params(0), CFG,
+                         ServeConfig(tgt_buckets=(7,)), num_options=5)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint restore contract
+# ---------------------------------------------------------------------------
+def test_restore_roundtrip_served_outputs_bit_equal(tmp_path):
+    """Train briefly, checkpoint, restore: the served predictions must be
+    bit-equal to the post-train ones (the serving contract)."""
+    data = make_survey_data(SurveyConfig(num_groups=6, num_questions=40))
+    tr, ev = split_groups(data)
+    gcfg = GPOConfig(d_embed=data.phi.shape[-1])
+    fed = FederatedGPO(gcfg, FedConfig(num_clients=len(tr), rounds=2),
+                       data, tr, ev)
+    fed.run(rounds=2)
+    params = fed.global_params
+    path = save_checkpoint(str(tmp_path), 2, params)
+    like = init_gpo_params(gcfg, jax.random.PRNGKey(0))
+    restored = restore_checkpoint(path, like)
+
+    trace = make_request_trace(data, list(ev), num_requests=4, seed=9)
+    scfg = ServeConfig(ctx_buckets=(40, 80), tgt_buckets=(20, 40))
+
+    def serve(p):
+        srv = PreferenceServer(p, gcfg, scfg,
+                               num_options=data.num_options)
+        return {c.rid: c.pred for c in srv.run_trace(trace)}
+
+    before, after = serve(params), serve(restored)
+    for rid in before:
+        assert np.array_equal(before[rid], after[rid])
+
+
+def test_restore_quantized_leaf_types(tmp_path):
+    params = _params(0)
+    path = save_checkpoint(str(tmp_path), 1, params)
+    qp = restore_checkpoint_quantized(path, params)
+    assert isinstance(qp["head"], QuantizedLinear)
+    assert qp["layers"].w1.q.dtype == jnp.int8
+    assert qp["layers"].ln2.dtype == jnp.float32
+    mu, _ = gpo_apply(qp, CFG, *_icl(3))
+    assert np.isfinite(np.asarray(mu)).all()
+
+
+def test_serve_restore_missing_checkpoint_clear_error(tmp_path):
+    from repro.launch.serve import _restore_params
+
+    with pytest.raises(SystemExit, match="no checkpoint under"):
+        _restore_params(str(tmp_path / "empty"), CFG, seed=0)
+
+
+def test_serve_restore_corrupt_checkpoint_clear_error(tmp_path):
+    from repro.launch.serve import _restore_params
+
+    (tmp_path / "ckpt_00000001.npz").write_bytes(b"not a real npz")
+    with pytest.raises(SystemExit, match="unreadable or does not match"):
+        _restore_params(str(tmp_path), CFG, seed=0)
+
+
+def test_serve_restore_shape_mismatch_clear_error(tmp_path):
+    from repro.launch.serve import _restore_params
+
+    other = init_gpo_params(
+        GPOConfig(d_embed=16, d_model=64, num_layers=2, num_heads=4,
+                  d_ff=64), jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path), 1, other)
+    with pytest.raises(SystemExit, match="does not match"):
+        _restore_params(str(tmp_path), CFG, seed=0)
