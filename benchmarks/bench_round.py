@@ -58,6 +58,14 @@ stale arrivals at full weight) vs the staleness-aware buffered fedbuff,
 plus the realized per-round survivor counts — the robustness/accuracy
 tradeoff is measured, not asserted.
 
+A ninth section (``--byzantine``) benchmarks Byzantine resilience
+(DESIGN.md §13) and writes ``BENCH_byz.json``: the attack x defense
+grid — {clean, sign_flip, scaled} x {fedavg, krum, geomedian} with
+f = 3 of 10 clients corrupt — reporting per-cell alignment curves, tail
+alignment, final loss, and a retention summary (attacked tail AS over
+each defense's own clean tail AS), so the robustness claim is measured,
+not asserted.
+
 Interpret-mode honesty: on CPU the Pallas kernels run in interpret mode,
 whose absolute timings are meaningless next to compiled jnp (≈1000x
 slow). Every Pallas timing carries its ``mode``; cross-mode speedup
@@ -110,6 +118,8 @@ COMM_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                              "BENCH_comm.json")
 ASYNC_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                               "BENCH_async.json")
+BYZ_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_byz.json")
 
 
 def _pallas_mode() -> str:
@@ -873,6 +883,101 @@ def bench_async(rounds: int, reps: int = 2) -> dict:
     return result
 
 
+def bench_byzantine(rounds: int, reps: int = 2) -> dict:
+    """Byzantine attack x defense grid (DESIGN.md §13): convergence of
+    the fused scan engine under adversarial clients, plain fedavg vs the
+    robust defenses.
+
+    10 train clients, f = 3 attackers (< C/2 - 1, inside every defense's
+    breakdown point); attacks ∈ {clean, sign_flip, scaled λ=30};
+    defenses ∈ {fedavg, krum, geomedian}.  Same tiny-GPO round structure
+    as the §11 fault bench so rounds are dispatch-cheap.  The horizon is
+    deliberately SHORT (default 25 rounds): sign_flip at f = 3/10 cuts
+    the mean update to 0.4× (it slows convergence rather than reversing
+    it) and scaled model-replacement self-limits once honest deltas
+    shrink, so at long horizons undefended fedavg quietly recovers and
+    the grid measures nothing.  Recorded per cell: the AS curve, the
+    tail AS (mean of the last 4 evals), final loss, and rounds/sec.
+    The acceptance claim — krum/geomedian hold tail alignment within 5%
+    of the clean run under both model-poisoning attacks while
+    undefended fedavg degrades — is derived in the emitted ``summary``
+    block (tail AS over the clean undefended fedavg baseline, the
+    natural control every cell shares), measured, not asserted.
+    """
+    from repro.configs import (AdversaryConfig, AggConfig, FedConfig,
+                               GPOConfig)
+    from repro.core import FederatedGPO
+    from repro.data import SurveyConfig, make_survey_data, split_groups
+
+    data = make_survey_data(SurveyConfig(
+        num_groups=17, num_questions=16, d_embed=4, seed=0))
+    train_groups, eval_groups = split_groups(data, train_frac=0.6, seed=0)
+    gcfg = GPOConfig(d_embed=4, d_model=8, num_layers=1, num_heads=1,
+                     d_ff=16)
+    c = len(train_groups)
+    f = 3  # < C/2 - 1 for C = 10: inside krum's f <= (C-3)/2 breakdown
+    scale = 30.0
+    attacks = {
+        "clean": AdversaryConfig(),
+        "sign_flip": AdversaryConfig(kind="sign_flip", num_attackers=f),
+        "scaled": AdversaryConfig(kind="scaled", num_attackers=f,
+                                  scale=scale),
+    }
+    defenses = {
+        "fedavg": AggConfig(name="fedavg"),
+        "krum": AggConfig(name="krum", num_malicious=f),
+        "geomedian": AggConfig(name="geomedian"),
+    }
+
+    def tail_as(hist):
+        tail = hist.eval_mean_as[-4:]
+        return sum(tail) / len(tail)
+
+    def run_cell(adv, agg):
+        fcfg = FedConfig(num_clients=c, rounds=rounds, local_epochs=6,
+                         lr=1e-2, eval_every=5, num_context=4,
+                         num_target=4, agg=agg, adversary=adv)
+        fed = FederatedGPO(gcfg, fcfg, data, train_groups, eval_groups)
+        hist = fed.run(rounds=rounds)
+        dt = _best_of(lambda: fed.run(rounds=rounds), max(1, reps - 1))
+        return hist, rounds / dt
+
+    result = {"rounds": rounds, "clients": c, "attackers": f,
+              "attack_scale": scale}
+    grid = {}
+    for aname, adv in attacks.items():
+        for dname, agg in defenses.items():
+            hist, rps = run_cell(adv, agg)
+            cell = {
+                "tail_mean_as": tail_as(hist),
+                "final_mean_as": hist.eval_mean_as[-1],
+                "final_loss": hist.round_loss[-1],
+                "eval_rounds": list(hist.eval_rounds),
+                "eval_mean_as": [round(a, 4) for a in hist.eval_mean_as],
+                "rounds_per_sec": rps,
+            }
+            grid[f"{aname}|{dname}"] = cell
+            print(f"byz/{aname} x {dname}: "
+                  f"tailAS={cell['tail_mean_as']:.4f} "
+                  f"loss={cell['final_loss']:.4f} ({rps:,.1f} r/s)")
+    result["grid"] = grid
+
+    # acceptance summary: per-cell tail retention relative to the clean
+    # undefended fedavg baseline (the control every cell shares)
+    baseline = grid["clean|fedavg"]["tail_mean_as"]
+    summary = {"baseline_clean_fedavg_tail_as": baseline}
+    for dname in defenses:
+        for aname in attacks:
+            if aname == "clean":
+                continue
+            att = grid[f"{aname}|{dname}"]["tail_mean_as"]
+            summary[f"{dname}_retention_{aname}"] = att / baseline
+    result["summary"] = summary
+    for k, v in sorted(summary.items()):
+        print(f"byz/summary {k}: {v:.4f}")
+    return result
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=200)
@@ -903,6 +1008,12 @@ def main() -> None:
                          "BENCH_async.json (DESIGN.md §11)")
     ap.add_argument("--async-rounds", type=int, default=80,
                     help="rounds per cell in the fault-tolerance sweep")
+    ap.add_argument("--byzantine", action="store_true",
+                    help="also run the Byzantine attack x defense grid "
+                         "and write BENCH_byz.json (DESIGN.md §13)")
+    ap.add_argument("--byz-rounds", type=int, default=25,
+                    help="rounds per cell in the Byzantine grid (kept "
+                         "short on purpose — see bench_byzantine)")
     ap.add_argument("--skip-lower", action="store_true",
                     help="skip the subprocess dryrun lowering in the "
                          "compression bench (the compiled all-gather "
@@ -976,6 +1087,18 @@ def main() -> None:
         with open(ASYNC_OUT_PATH, "w") as f:
             json.dump(async_report, f, indent=2)
         print(f"wrote {os.path.abspath(ASYNC_OUT_PATH)}")
+
+    if args.byzantine:
+        byz_report = {
+            "backend": jax.default_backend(),
+            "xla_flags": os.environ.get("XLA_FLAGS", ""),
+            "prng": "rbg",
+            "byzantine": bench_byzantine(args.byz_rounds,
+                                         reps=min(args.reps, 2)),
+        }
+        with open(BYZ_OUT_PATH, "w") as f:
+            json.dump(byz_report, f, indent=2)
+        print(f"wrote {os.path.abspath(BYZ_OUT_PATH)}")
 
     if not args.skip_agg:
         agg_report = {

@@ -40,6 +40,13 @@ def main() -> None:
     #    agg=AggConfig(name="fedbuff") for staleness-aware buffered
     #    aggregation, and see `bench_round.py --faults` /
     #    `dryrun.py --gpo-fed --faults` for the robustness numbers.
+    #    To simulate Byzantine clients (DESIGN.md §13) add
+    #      adversary=AdversaryConfig(kind="sign_flip", num_attackers=3)
+    #    and pick a defense with agg=AggConfig(name="krum",
+    #    num_malicious=3) (or geomedian/median, and/or norm_bound=1.0);
+    #    from the CLI the same knobs are `train --trainer gpo
+    #    --attack sign_flip --attackers 3 --agg krum` — the attack ×
+    #    defense grid lives in `bench_round.py --byzantine`.
     gpo_cfg = GPOConfig(d_embed=data.phi.shape[-1])
     fed_cfg = FedConfig(num_clients=len(train_groups), rounds=150,
                         local_epochs=6, lr=3e-4, eval_every=25)

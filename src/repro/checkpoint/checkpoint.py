@@ -4,6 +4,16 @@ Works for model params, optimizer state, and full federated state (stacked
 per-client trees). On a real multi-host pod each host saves only addressable
 shards; here (single-host) we gather to host memory, which is also what the
 dry-run needs.
+
+Every checkpoint carries a CRC32 content checksum (``__crc32__`` entry)
+over the sorted leaf names, dtypes, shapes, and raw bytes. ``os.replace``
+atomicity rules out a *torn* file, but not silent bit rot or a truncated
+copy from another filesystem — ``restore_checkpoint`` recomputes the
+checksum on load and raises ``ValueError`` on mismatch (pre-checksum
+checkpoints, lacking the entry, still load). A corrupt zip container
+(``zipfile.BadZipFile`` out of ``np.load``) is converted to ``ValueError``
+too, so callers' existing OSError/ValueError/KeyError handling — e.g.
+``launch/serve.py``'s actionable ``--restore`` failure — covers it.
 """
 from __future__ import annotations
 
@@ -11,6 +21,8 @@ import json
 import os
 import re
 import tempfile
+import zipfile
+import zlib
 from typing import Any
 
 import jax
@@ -19,6 +31,21 @@ import numpy as np
 
 PyTree = Any
 _SEP = "|"  # flat-key separator (path components may contain '/')
+_CRC_KEY = "__crc32__"  # reserved npz entry: content checksum
+
+
+def _content_crc(stored: dict[str, np.ndarray]) -> int:
+    """CRC32 over the checkpoint payload: sorted (name, dtype, shape,
+    bytes) per leaf, chained. Covers renames and dtype/shape rewrites,
+    not just flipped payload bytes."""
+    crc = 0
+    for k in sorted(stored):
+        arr = np.ascontiguousarray(stored[k])
+        crc = zlib.crc32(k.encode(), crc)
+        crc = zlib.crc32(str(arr.dtype).encode(), crc)
+        crc = zlib.crc32(str(arr.shape).encode(), crc)
+        crc = zlib.crc32(arr.tobytes(), crc)
+    return crc & 0xFFFFFFFF
 
 
 def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
@@ -53,11 +80,13 @@ def save_checkpoint(directory: str, step: int, tree: PyTree,
     the ``.tmp`` names."""
     os.makedirs(directory, exist_ok=True)
     flat = _flatten(tree)
+    stored = {k.replace("/", _SEP): v for k, v in flat.items()}
+    stored[_CRC_KEY] = np.asarray(_content_crc(stored), np.uint32)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
     try:
         with os.fdopen(fd, "wb") as f:
-            np.savez(f, **{k.replace("/", _SEP): v for k, v in flat.items()})
+            np.savez(f, **stored)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)
@@ -82,9 +111,26 @@ def save_checkpoint(directory: str, step: int, tree: PyTree,
 
 
 def restore_checkpoint(path: str, like: PyTree) -> PyTree:
-    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
-    with np.load(path) as data:
-        flat = {k.replace(_SEP, "/"): data[k] for k in data.files}
+    """Restore into the structure of ``like`` (shapes/dtypes validated).
+    Verifies the ``__crc32__`` content checksum when present and raises
+    ``ValueError`` on mismatch or a corrupt zip container."""
+    try:
+        with np.load(path) as data:
+            stored = {k: data[k] for k in data.files}
+    except zipfile.BadZipFile as e:
+        # np.load leaks the zipfile error type; normalize to ValueError so
+        # callers' unreadable-checkpoint handling needs one except clause
+        raise ValueError(f"corrupt checkpoint {path!r}: {e}") from e
+    crc = stored.pop(_CRC_KEY, None)
+    if crc is not None:
+        expect = int(np.asarray(crc).ravel()[0])
+        actual = _content_crc(stored)
+        if actual != expect:
+            raise ValueError(
+                f"checkpoint {path!r} failed its content checksum "
+                f"(stored crc32 {expect:#010x}, recomputed "
+                f"{actual:#010x}): the file was corrupted after save")
+    flat = {k.replace(_SEP, "/"): v for k, v in stored.items()}
 
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(like)[0]
     treedef = jax.tree_util.tree_structure(like)

@@ -6,6 +6,7 @@ from repro.configs.base import (  # noqa: F401
     GLOBAL,
     INPUT_SHAPES,
     MAMBA,
+    AdversaryConfig,
     AggConfig,
     AvailabilityConfig,
     CompressionConfig,

@@ -311,6 +311,69 @@ class AvailabilityConfig:
 
 
 @dataclass(frozen=True)
+class AdversaryConfig:
+    """Byzantine adversarial-client simulator (DESIGN.md §13).
+
+    Drives the attack-injection layer of the federated round
+    (``core/adversary.py``): per round, exactly ``num_attackers``
+    clients are marked Byzantine by draws folded out of a per-round
+    Byzantine key — the attacker *schedule* is a deterministic function
+    of (seed, round, client index) and bit-identical across the scan,
+    loop, and sharded engines — and their released deltas (or, for
+    ``label_flip``, their local training data) are corrupted before the
+    privacy/codec/aggregation stages see them. The threat model is the
+    strongest standard one: attackers are omniscient colluders who know
+    the honest updates of the round (``alie`` uses their empirical
+    moments), but the server-side defenses (krum / multi_krum /
+    geomedian / norm_bound, DESIGN.md §13) never learn which clients
+    are corrupt.
+
+    The default (``kind="none"``) disables the layer *statically*: the
+    engines trace the exact pre-attack computation, bit-equal to a
+    pre-PR run (pinned by tests/test_adversary.py, the availability /
+    privacy / compression degeneracy-pin style).
+    """
+
+    # none | sign_flip | scaled | gaussian | alie | label_flip
+    kind: str = "none"
+    # Byzantine population size f: exactly f clients (re-drawn each
+    # round) attack. Defenses tolerate f below their breakdown point
+    # (krum/multi_krum need f <= C - 3 selectable, robust f < C/2).
+    num_attackers: int = 0
+    # scaled model-replacement factor λ: attacker ships λ·d (λ large
+    # drags a mean-style aggregator toward the malicious direction).
+    scale: float = 10.0
+    # additive Gaussian attack: per-coordinate noise std added to the
+    # attacker's honest delta.
+    noise_std: float = 1.0
+    # ALIE (Baruch et al. 2019): colluding attackers all ship
+    # mean_honest + z · std_honest per coordinate — inside the honest
+    # spread, so distance-based defenses struggle; z is the deviation.
+    alie_z: float = 1.0
+
+    @property
+    def enabled(self) -> bool:
+        return self.kind != "none" and self.num_attackers > 0
+
+    @property
+    def data_level(self) -> bool:
+        """Attack corrupts the local training data, not the released
+        delta (the delta-stage attack transform is the identity)."""
+        return self.kind == "label_flip"
+
+    def validate(self) -> None:
+        kinds = ("none", "sign_flip", "scaled", "gaussian", "alie",
+                 "label_flip")
+        if self.kind not in kinds:
+            raise ValueError(
+                f"adversary kind {self.kind!r} must be one of {kinds}")
+        if self.num_attackers < 0:
+            raise ValueError("num_attackers must be >= 0")
+        if self.noise_std < 0.0:
+            raise ValueError("noise_std must be >= 0")
+
+
+@dataclass(frozen=True)
 class CompressionConfig:
     """Client→server delta-compression stage (DESIGN.md §10).
 
@@ -441,7 +504,8 @@ class AggConfig:
     """
 
     # registry name: fedavg | fedavgm | fedadam | fedyogi | fedprox |
-    # trimmed_mean | median | adaptive  (repro.core.aggregation)
+    # trimmed_mean | median | adaptive | fedbuff | krum | multi_krum |
+    # geomedian  (repro.core.aggregation)
     name: str = "fedavg"
     # server learning rate on the aggregated delta (1.0 == paper FedAvg)
     server_lr: float = 1.0
@@ -482,6 +546,24 @@ class AggConfig:
     # weight — the failure mode fedbuff's discounted buffering exists
     # to fix (the BENCH_async.json fedavg cells pin it to 0.0).
     staleness_power: float = 0.5
+    # krum / multi_krum (Blanchard et al. 2017): the number of Byzantine
+    # clients the selection must tolerate. Each client is scored by the
+    # sum of its (n - f - 2) smallest squared distances to the others;
+    # krum returns the single lowest-scoring delta, multi_krum the
+    # weighted mean of the ``multi_krum_m`` lowest. Breakdown point:
+    # selection is sound while 2f + 2 < n.
+    num_malicious: int = 0
+    multi_krum_m: int = 3
+    # geomedian: smoothed Weiszfeld iterations and the smoothing floor
+    # eps on the per-client distances (jit-stable fixed iteration count;
+    # Pillutla et al. 2022). Breakdown point 1/2 of the weight mass.
+    geomedian_iters: int = 8
+    geomedian_eps: float = 1e-6
+    # server-side per-client L2 norm bound (DESIGN.md §13): each
+    # client's released delta row is clipped to this norm BEFORE the
+    # reduce, bounding any single client's pull on a linear aggregate.
+    # Composes with every strategy; 0.0 disables (bit-equal paths).
+    norm_bound: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -535,6 +617,12 @@ class FedConfig:
     # degradation semantics for every aggregation strategy. The default
     # (everything benign) traces the exact pre-fault computation.
     avail: AvailabilityConfig = AvailabilityConfig()
+    # Byzantine adversarial-client simulation (DESIGN.md §13): per-
+    # round attacker masks with deterministic fold-out keys and delta-
+    # or data-level corruption injected between local training and the
+    # privacy/codec/aggregation stages. The default (kind="none")
+    # traces the exact pre-attack computation.
+    adversary: AdversaryConfig = AdversaryConfig()
     # hard-error instead of warning when a configuration leaks
     # un-privatized client statistics around the DP release — today:
     # agg.name == "adaptive" keeps raw-loss EMAs (DESIGN.md §9) while

@@ -24,6 +24,19 @@ from repro.core.aggregation import (  # noqa: F401
     make_aggregator,
 )
 from repro.core.federated import FederatedGPO, History, make_sharded_round  # noqa: F401
+from repro.core.adversary import (  # noqa: F401
+    apply_attack,
+    attacker_mask,
+    check_defense_composition,
+    flip_preferences,
+    fold_byz_key,
+    norm_clip_rows,
+)
+from repro.core.pipeline import (  # noqa: F401
+    STAGE_NAMES,
+    RoundPipeline,
+    make_pipeline,
+)
 from repro.core.availability import (  # noqa: F401
     FaultState,
     RoundSchedule,

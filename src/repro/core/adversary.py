@@ -1,0 +1,228 @@
+"""Byzantine adversarial-client simulation (DESIGN.md §13).
+
+The attack-injection layer of the federated round. Three pieces:
+
+1. **A deterministic attacker schedule.** Per round, a *Byzantine key*
+   folds out of the round key (``fold_byz_key``, the §11 fault-key
+   scheme with its own tag); per-client draws fold the (static) client
+   index into it. Exactly ``AdversaryConfig.num_attackers`` clients —
+   the f lowest uniform draws — are Byzantine this round, so the
+   attacker schedule is a pure function of (seed, round, client index):
+   the fused ``lax.scan`` driver, the per-round loop driver, and
+   ``make_sharded_round`` replay bit-identical attack traces, and every
+   mesh shard recomputes the full-population mask REPLICATED (no
+   collective moves to agree on who is corrupt).
+
+2. **Delta-level attack transforms.** ``apply_attack`` corrupts the
+   attacked rows of the raw flat (C, P) delta matrix BETWEEN local
+   training and the privacy/codec release — the Byzantine client
+   controls what it ships, so its corruption passes through DP clipping
+   and the transport codec like any honest update:
+
+   * ``sign_flip`` — ship −d (gradient ascent on the global objective);
+   * ``scaled`` — ship λ·d (model replacement; a large λ dominates any
+     mean-style aggregate);
+   * ``gaussian`` — ship d + σ·ε with deterministic per-client fold-out
+     noise keys (GLOBAL client indices, so the stacked and sharded
+     engines corrupt identically);
+   * ``alie`` — "a little is enough" (Baruch et al. 2019): colluding
+     attackers all ship mean_honest + z·std_honest per coordinate,
+     staying inside the honest empirical spread so distance-based
+     defenses cannot separate them. The honest moments come from the
+     non-attacked rows (omniscient-collusion threat model); the sharded
+     engine psums the masked moment sums (``honest_stats_sharded``) —
+     extra collectives are acceptable because only the attack-OFF
+     config is byte-pinned.
+
+3. **Data-level preference poisoning.** ``kind="label_flip"`` corrupts
+   the attacked clients' LOCAL TRAINING DATA instead of their deltas:
+   ``flip_preferences`` maps each preference row p(a|q) to
+   (1 − p)/(A − 1) — a simplex-to-simplex pointwise map that exactly
+   reverses the preference ordering — inside ``_make_local_train``
+   (the delta-stage transform is the identity). The resulting update is
+   a *plausible* model delta, the hard case for norm- and distance-
+   based defenses.
+
+The benign default (``kind="none"``) disables the layer *statically*:
+every engine traces the exact pre-attack computation, bit-equal to a
+pre-PR round (pinned by tests/test_adversary.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AdversaryConfig
+
+# fold_in tag deriving the round's Byzantine key from the round key (the
+# §9/§10/§11 scheme: one fixed constant, distinct from _NOISE_TAG,
+# _QUANT_TAG and _FAULT_TAG).
+_BYZ_TAG = 0xBAD0C
+# fold_in index deriving an attacker's Gaussian-attack noise key from
+# its per-client Byzantine key (index 0 is the attacker-selection draw).
+_ATTACK_NOISE_IDX = 1
+
+
+def fold_byz_key(round_key: jnp.ndarray) -> jnp.ndarray:
+    """The round's Byzantine key. Folded from the ROUND key (not the
+    per-client training keys) so every engine — and every shard — can
+    derive the full population's attacker mask from one replicated
+    value."""
+    return jax.random.fold_in(round_key, _BYZ_TAG)
+
+
+def attacker_draws(byz_key: jnp.ndarray, num_clients: int) -> jnp.ndarray:
+    """(C,) per-client uniforms; client c's draw depends only on
+    (byz_key, c), so subsampling, sharding, and engine choice cannot
+    perturb it."""
+    def one(c):
+        return jax.random.uniform(jax.random.fold_in(byz_key, c), (),
+                                  jnp.float32)
+
+    return jax.vmap(one)(jnp.arange(num_clients, dtype=jnp.int32))
+
+
+def attacker_mask(byz_key: jnp.ndarray, num_clients: int,
+                  num_attackers: int) -> jnp.ndarray:
+    """(C,) bool: EXACTLY min(f, C) clients attack this round — the f
+    lowest uniform draws (a double argsort gives each client its rank;
+    jnp argsort is stable, so the mask is deterministic even under
+    ties). Re-drawn every round: the Byzantine population moves, the
+    harder setting for stateful defenses."""
+    f = min(int(num_attackers), num_clients)
+    if f <= 0:
+        return jnp.zeros((num_clients,), bool)
+    u = attacker_draws(byz_key, num_clients)
+    rank = jnp.argsort(jnp.argsort(u))
+    return rank < f
+
+
+def attack_noise(byz_key: jnp.ndarray, gids: jnp.ndarray,
+                 num_params: int) -> jnp.ndarray:
+    """(rows, P) standard normals for the ``gaussian`` attack, keyed by
+    GLOBAL client ids so a sharded row and its stacked counterpart draw
+    identical noise."""
+    def one(g):
+        k = jax.random.fold_in(jax.random.fold_in(byz_key, g),
+                               _ATTACK_NOISE_IDX)
+        return jax.random.normal(k, (num_params,), jnp.float32)
+
+    return jax.vmap(one)(gids.astype(jnp.int32))
+
+
+def honest_stats(vecs: jnp.ndarray,
+                 mask: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Coordinate-wise (mean, std) over the NON-attacked rows of a
+    (rows, P) matrix — the empirical spread ALIE steers within. Uses
+    the moment form E[x²] − E[x]² so the sharded psum variant computes
+    the identical estimator."""
+    h = (~mask).astype(jnp.float32)[:, None]
+    n = jnp.maximum(jnp.sum(h), 1.0)
+    x = vecs.astype(jnp.float32)
+    s1 = jnp.sum(h * x, axis=0)
+    s2 = jnp.sum(h * x * x, axis=0)
+    mean = s1 / n
+    var = jnp.maximum(s2 / n - mean * mean, 0.0)
+    return mean, jnp.sqrt(var)
+
+
+def honest_stats_sharded(vecs: jnp.ndarray, mask: jnp.ndarray,
+                         axes) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``honest_stats`` over a client-sharded (C_local, P) matrix: the
+    masked moment sums psum over the client mesh axes, so colluding
+    attackers on different shards agree on the honest spread."""
+    h = (~mask).astype(jnp.float32)[:, None]
+    x = vecs.astype(jnp.float32)
+    n = jnp.maximum(jax.lax.psum(jnp.sum(h), axes), 1.0)
+    s1 = jax.lax.psum(jnp.sum(h * x, axis=0), axes)
+    s2 = jax.lax.psum(jnp.sum(h * x * x, axis=0), axes)
+    mean = s1 / n
+    var = jnp.maximum(s2 / n - mean * mean, 0.0)
+    return mean, jnp.sqrt(var)
+
+
+def apply_attack(vecs: jnp.ndarray, mask: jnp.ndarray,
+                 adv: AdversaryConfig, byz_key: jnp.ndarray,
+                 gids: jnp.ndarray, *,
+                 stats: Optional[tuple] = None) -> jnp.ndarray:
+    """Corrupt the attacked rows of the raw flat (rows, P) delta matrix.
+    ``mask``/``gids`` are this engine's view of the population: the
+    attacked flag and GLOBAL client id per row. ``stats`` overrides the
+    ALIE honest moments (the sharded engine passes its psum'd ones).
+    ``kind`` is static config — the none/label_flip identity never
+    traces an attack op."""
+    if not adv.enabled or adv.data_level:
+        return vecs
+    x = vecs.astype(jnp.float32)
+    if adv.kind == "sign_flip":
+        bad = -x
+    elif adv.kind == "scaled":
+        bad = adv.scale * x
+    elif adv.kind == "gaussian":
+        bad = x + adv.noise_std * attack_noise(byz_key, gids, x.shape[1])
+    elif adv.kind == "alie":
+        mean, std = stats if stats is not None else honest_stats(x, mask)
+        bad = jnp.broadcast_to(mean + adv.alie_z * std, x.shape)
+    else:  # pragma: no cover - AdversaryConfig.validate rejects earlier
+        raise ValueError(f"unknown delta-level attack {adv.kind!r}")
+    return jnp.where(mask[:, None], bad, x)
+
+
+def flip_preferences(y: jnp.ndarray, num_options: int) -> jnp.ndarray:
+    """Label-flip poisoning on flattened preference targets: each point
+    carries p(a|q) for one option, and (1 − p)/(A − 1) keeps every
+    question's row on the simplex (rows sum to 1) while exactly
+    reversing the preference ordering — the most-preferred option
+    becomes least-preferred. Pointwise, so it needs no per-question
+    regrouping of the flattened (t·A,) layout."""
+    return (1.0 - y.astype(jnp.float32)) / float(max(num_options - 1, 1))
+
+
+def norm_clip_rows(vecs: jnp.ndarray, bound: float) -> jnp.ndarray:
+    """Server-side norm-bounding defense (``AggConfig.norm_bound``):
+    scale each RECEIVED client row to L2 norm ≤ bound, so no single
+    client can pull a linear aggregate further than bound/C · server_lr.
+    Same floor semantics as the §9 client-side clip (zero rows keep
+    scale 1); unlike §9 this clips what the server heard, after any
+    DP/codec release, and carries no privacy claim."""
+    x = vecs.astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(jnp.square(x), axis=1))
+    scale = jnp.minimum(1.0, bound / jnp.maximum(norms, 1e-12))
+    return x * scale[:, None]
+
+
+_DEFENSE_COMPOSITION_MSG = (
+    "agg.name='adaptive' reweighs groups by their RAW per-round local "
+    "losses while a Byzantine defense is engaged "
+    "(adversary.kind={kind!r}, agg.norm_bound={nb}): a validation-loss-"
+    "dependent rule is both un-privatized under noise_multiplier={z} > 0 "
+    "(the §9 side channel) and directly attacker-steerable — a Byzantine "
+    "client reports whatever loss inflates its own weight, bypassing the "
+    "delta-level defense entirely (DESIGN.md §13). Use a loss-free "
+    "strategy (krum/geomedian/median) for a defended DP run, or set "
+    "FedConfig.strict_privacy=False to proceed with this warning.")
+
+
+def check_defense_composition(fed_cfg) -> None:
+    """Guard the defended-run + adaptive-aggregation + DP-noise
+    foot-gun: when an adversarial context is configured (an attack
+    simulation or server-side norm bounding) AND the aggregation rule
+    depends on client-reported validation losses AND DP noise promises
+    a guarantee, the loss channel is simultaneously a privacy leak and
+    an unprotected attack surface. Warns loudly by default;
+    ``FedConfig.strict_privacy=True`` hard-errors (mirrors
+    ``privacy.check_adaptive_privacy``)."""
+    defended = (fed_cfg.adversary.enabled
+                or fed_cfg.agg.norm_bound > 0.0)
+    if (defended and fed_cfg.agg.name == "adaptive"
+            and fed_cfg.privacy.enabled
+            and fed_cfg.privacy.noise_multiplier > 0.0):
+        msg = _DEFENSE_COMPOSITION_MSG.format(
+            kind=fed_cfg.adversary.kind, nb=fed_cfg.agg.norm_bound,
+            z=fed_cfg.privacy.noise_multiplier)
+        if fed_cfg.strict_privacy:
+            raise ValueError(msg)
+        import warnings
+        warnings.warn(msg, UserWarning, stacklevel=2)

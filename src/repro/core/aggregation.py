@@ -51,6 +51,7 @@ from repro.configs.base import AggConfig
 from repro.core.fedavg import fedavg_stacked
 from repro.kernels import (
     agg_momentum_reduce,
+    agg_pairwise_dists,
     agg_trimmed_reduce,
     fedavg_reduce,
 )
@@ -482,3 +483,139 @@ def _make_fedbuff(cfg, *, num_clients, use_pallas):
 @AGGREGATORS.register("fedbuff")
 def _fedbuff_factory():
     return _make_fedbuff
+
+
+# ---------------------------------------------------------------------------
+# Byzantine-robust defenses (DESIGN.md §13). All are mask-tolerant via
+# the weights vector: rows with weight 0 (crashed / buffered clients in
+# the fault-aware round) are excluded from selection and never chosen.
+# ---------------------------------------------------------------------------
+# finite sentinel for masked pairwise distances / scores. NOT inf: with
+# very few active clients every score would be inf and argmin over
+# all-inf is a degenerate tie; a large-but-finite sentinel keeps the
+# ordering (active < inactive) strict and the arithmetic NaN-free.
+_BIG = jnp.float32(1e30)
+
+
+def _pairwise_sq_dists(vecs: jnp.ndarray, use_pallas: bool) -> jnp.ndarray:
+    if use_pallas:
+        return agg_pairwise_dists(vecs)
+    x = vecs.astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=1)
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * x @ x.T, 0.0)
+
+
+def krum_scores(vecs: jnp.ndarray, weights: jnp.ndarray, f: int, *,
+                use_pallas: bool = False) -> jnp.ndarray:
+    """(C,) Krum scores (Blanchard et al. 2017): client c's score is the
+    sum of its n − f − 2 smallest squared distances to OTHER active
+    clients (n = number of active rows). Lower is better — an attacker
+    far from the honest cluster accumulates huge distances. ``weights``
+    only gates activity here (weight 0 ⇒ excluded from both scoring and
+    selection); magnitudes don't shift the order statistics."""
+    x = vecs.astype(jnp.float32)
+    c = x.shape[0]
+    active = weights.astype(jnp.float32) > 0.0
+    n = jnp.sum(active.astype(jnp.int32))
+    d = _pairwise_sq_dists(x, use_pallas)
+    pair_ok = active[:, None] & active[None, :]
+    off_diag = ~jnp.eye(c, dtype=bool)
+    d = jnp.where(pair_ok & off_diag, d, _BIG)
+    # n is traced (fault rounds mask rows dynamically), so the neighbor
+    # count is a traced clamp, applied as a rank predicate on the sorted
+    # distance rows rather than a static slice.
+    nn = jnp.clip(n - f - 2, 1, c - 1)
+    ds = jnp.sort(d, axis=1)
+    ranks = jnp.arange(c)[None, :]
+    score = jnp.sum(jnp.where(ranks < nn, ds, 0.0), axis=1)
+    return jnp.where(active, score, _BIG * jnp.float32(c))
+
+
+def _make_krum(multi: bool):
+    def make(cfg, *, num_clients, use_pallas):
+        f = cfg.num_malicious
+        m_sel = max(1, min(cfg.multi_krum_m, num_clients))
+
+        def reduce_flat(vecs, weights):
+            x = vecs.astype(jnp.float32)
+            scores = krum_scores(x, weights, f, use_pallas=use_pallas)
+            if not multi:
+                return x[jnp.argmin(scores)]
+            # multi-Krum: weighted mean of the m_sel best-scored rows
+            # (weights renormalized over the selection; zero-weight rows
+            # may enter the selection set but contribute 0 mass)
+            rank = jnp.argsort(jnp.argsort(scores))
+            sel = rank < min(m_sel, x.shape[0])
+            w = jnp.where(sel, weights.astype(jnp.float32), 0.0)
+            w = w / jnp.maximum(jnp.sum(w), 1e-12)
+            return jnp.einsum("c,cp->p", w, x)
+
+        def reduce(deltas, weights):
+            like = tree_index(deltas, 0)
+            return tree_unflatten_from_vector(
+                reduce_flat(tree_ravel_clients(deltas), weights), like)
+
+        return ServerAggregator(
+            name=cfg.name, cfg=cfg, linear=False, needs_losses=False,
+            init=lambda g: _zeros_state(g),
+            weigh=_identity_weigh, reduce=reduce, reduce_flat=reduce_flat,
+            apply=_apply_sgd(cfg))
+
+    return make
+
+
+@AGGREGATORS.register("krum")
+def _krum_factory():
+    return _make_krum(multi=False)
+
+
+@AGGREGATORS.register("multi_krum")
+def _multi_krum_factory():
+    return _make_krum(multi=True)
+
+
+def geometric_median_flat(vecs: jnp.ndarray, weights: jnp.ndarray, *,
+                          iters: int, eps: float) -> jnp.ndarray:
+    """Smoothed Weiszfeld iteration for the weighted geometric median
+    (Pillutla et al. 2022): y ← Σ_c (w_c/max(‖x_c−y‖, eps)) x_c /
+    Σ_c (w_c/max(‖x_c−y‖, eps)), a FIXED ``iters`` steps from the
+    weighted mean — fixed so the computation is jit-stable (no traced
+    convergence test) and every engine runs the identical schedule.
+    Zero-weight rows drop out exactly (w_c = 0 ⇒ zero Weiszfeld mass).
+    Breakdown point 1/2: any minority weight mass moves the optimum a
+    bounded distance, no matter how far the corrupt rows sit."""
+    x = vecs.astype(jnp.float32)
+    w = jnp.maximum(weights.astype(jnp.float32), 0.0)
+    wn = w / jnp.maximum(jnp.sum(w), 1e-12)
+    y0 = jnp.einsum("c,cp->p", wn, x)
+
+    def body(_, y):
+        dist = jnp.sqrt(jnp.sum(jnp.square(x - y[None, :]), axis=1))
+        inv = w / jnp.maximum(dist, eps)
+        return (jnp.einsum("c,cp->p", inv, x)
+                / jnp.maximum(jnp.sum(inv), 1e-12))
+
+    return jax.lax.fori_loop(0, iters, body, y0)
+
+
+def _make_geomedian(cfg, *, num_clients, use_pallas):
+    iters, eps = cfg.geomedian_iters, cfg.geomedian_eps
+
+    def reduce_flat(vecs, weights):
+        return geometric_median_flat(vecs, weights, iters=iters, eps=eps)
+
+    def reduce(deltas, weights):
+        like = tree_index(deltas, 0)
+        return tree_unflatten_from_vector(
+            reduce_flat(tree_ravel_clients(deltas), weights), like)
+
+    return ServerAggregator(
+        name=cfg.name, cfg=cfg, linear=False, needs_losses=False,
+        init=lambda g: _zeros_state(g),
+        weigh=_identity_weigh, reduce=reduce, reduce_flat=reduce_flat,
+        apply=_apply_sgd(cfg))
+
+
+@AGGREGATORS.register("geomedian")
+def _geomedian_factory():
+    return _make_geomedian

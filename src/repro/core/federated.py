@@ -54,9 +54,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig, GPOConfig
+from repro.core import adversary as byz
 from repro.core import availability as av
 from repro.core import compression as cx, fairness, privacy as dp
 from repro.core.aggregation import ServerAggregator, make_aggregator
+from repro.core.pipeline import make_pipeline
 from repro.core.fedavg import (
     broadcast_to_clients,
     fedavg_allreduce,
@@ -87,16 +89,33 @@ def _make_local_train(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
     proximal term (mu/2)*||theta - theta_global||^2 anchors each local
     step to the round's broadcast global (= the entry params); the
     reported loss stays the task loss so strategies compare on Eq. 1.
-    The mu == 0 path traces byte-identical to the seed objective."""
-    mu = fed_cfg.agg.prox_mu
+    The mu == 0 path traces byte-identical to the seed objective.
 
-    def local_train(params, opt_state, key, group_id):
+    With a data-level adversary configured (``kind="label_flip"``,
+    DESIGN.md §13) the returned function gains a trailing per-client
+    ``attacked`` flag and poisons the attacked clients' sampled
+    preference rows — context AND target, the Byzantine client poisons
+    everything it feeds the optimizer — via ``byz.flip_preferences``.
+    The attack-off signature and trace are unchanged (static branch)."""
+    mu = fed_cfg.agg.prox_mu
+    flip = fed_cfg.adversary.enabled and fed_cfg.adversary.data_level
+
+    def local_body(params, opt_state, key, group_id, attacked):
         anchor = params  # the round's broadcast global model
 
         def epoch_step(carry, k):
             params, opt_state = carry
             batch = sample_icl_batch(k, data, group_id,
                                      fed_cfg.num_context, fed_cfg.num_target)
+            if flip:
+                def poison(y):
+                    y = y.astype(jnp.float32)
+                    return jnp.where(
+                        attacked,
+                        byz.flip_preferences(y, data.num_options), y)
+
+                batch = batch._replace(ctx_y=poison(batch.ctx_y),
+                                       tgt_y=poison(batch.tgt_y))
             if mu > 0.0:
                 def objective(p):
                     task = gpo_loss(p, gpo_cfg, batch.ctx_x, batch.ctx_y,
@@ -117,6 +136,13 @@ def _make_local_train(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
         (params, opt_state), losses = jax.lax.scan(
             epoch_step, (params, opt_state), keys)
         return params, opt_state, jnp.mean(losses)
+
+    if flip:
+        def local_train(params, opt_state, key, group_id, attacked):
+            return local_body(params, opt_state, key, group_id, attacked)
+    else:
+        def local_train(params, opt_state, key, group_id):
+            return local_body(params, opt_state, key, group_id, None)
 
     return local_train
 
@@ -166,7 +192,9 @@ class FederatedGPO:
         fed_cfg.privacy.validate()
         fed_cfg.compression.validate()
         fed_cfg.avail.validate()
+        fed_cfg.adversary.validate()
         dp.check_adaptive_privacy(fed_cfg)
+        byz.check_defense_composition(fed_cfg)
         self.gpo_cfg, self.fed_cfg, self.data = gpo_cfg, fed_cfg, data
         self.train_groups = jnp.asarray(train_groups, jnp.int32)
         self.eval_groups = jnp.asarray(eval_groups, jnp.int32)
@@ -230,6 +258,12 @@ class FederatedGPO:
         agg = self.agg
         priv = fed_cfg.privacy
         ef = comp.enabled and comp.error_feedback
+        # round-stage pipeline (DESIGN.md §13): the [local_train, attack,
+        # privacy, codec, aggregate] sequence assembles ONCE here; both
+        # stacked round bodies below delegate the stage dispatch to it
+        # (the attack-off pipeline traces the exact pre-§13 computation).
+        pipe = make_pipeline(fed_cfg, agg=agg, num_clients=num_clients)
+        adv_on = fed_cfg.adversary.enabled
 
         def round_step(global_params, opt_states, server_state, resid, key):
             k_sub, k_train = jax.random.split(key)
@@ -247,58 +281,30 @@ class FederatedGPO:
             else:
                 opt_sub = jax.tree.map(lambda x: x[idx], opt_states)
             keys = jax.random.split(k_train, m)
+            # the Byzantine key folds out of the ROUND key (like the §11
+            # fault key, its own tag) — None when the adversary is off,
+            # so the benign trace never folds it
+            bk = pipe.fold_key(key)
+            train_args = (client_params, opt_sub, keys, groups)
+            if pipe.flip_data:
+                train_args += (pipe.attacked_flags(bk, idx),)
             new_client_params, opt_sub, losses = jax.vmap(local_train)(
-                client_params, opt_sub, keys, groups)
+                *train_args)
             opt_states = jax.tree.map(
                 lambda full, sub: full.at[idx].set(sub), opt_states,
                 opt_sub)
             # delta contract (DESIGN.md §7): clients ship theta_g - theta;
-            # the server reduces over the client axis and applies its
-            # stateful update (Eq. 3 FedAvg being the default strategy).
+            # the server runs the pipeline's [attack →] privacy → codec →
+            # aggregate tail (Eq. 3 FedAvg being the default strategy;
+            # the EF residual rows of this round's participants update in
+            # place, non-sampled clients keep theirs).
             deltas = tree_sub(new_client_params, client_params)
-            if comp.enabled:
-                # compressed transport (DESIGN.md §10): DP release (if
-                # any) THEN the codec — quantization/sparsification is
-                # post-processing of the released value, so ε is
-                # untouched — THEN the client-axis reduction. The EF
-                # residual rows of this round's participants update in
-                # place; non-sampled clients keep theirs.
-                w_eff = agg.weigh(server_state, w, idx)
-                r_sub = resid[idx] if ef else None
-                delta_vec, new_r = cx.transport_delta_flat(
-                    tree_ravel_clients(deltas), w_eff, keys, priv, comp,
-                    agg, r_sub,
-                    use_pallas=fed_cfg.use_pallas_aggregation)
-                if ef:
-                    resid = resid.at[idx].set(new_r)
-                delta = tree_unflatten_from_vector(delta_vec,
-                                                   global_params)
-                new_global, server_state = agg.apply(
-                    server_state, global_params, delta, losses=losses,
-                    idx=idx)
-            elif priv.enabled:
-                # DP pipeline (DESIGN.md §9): clip + per-client noise on
-                # the flat delta matrix BEFORE the aggregator. Noise keys
-                # fold out of the per-client training keys, so both
-                # drivers (and the sharded engine) derive identical noise
-                # from the same round key. The linear family fuses the
-                # clip into the reduction (agg_clip_reduce under
-                # use_pallas_aggregation — this supersedes fedavgm's
-                # fused momentum step, whose math agg.apply reproduces);
-                # robust strategies rank-trim the privatized matrix.
-                w_eff = agg.weigh(server_state, w, idx)
-                delta_vec = dp.private_delta_flat(
-                    tree_ravel_clients(deltas), w_eff, keys, priv, agg,
-                    use_pallas=fed_cfg.use_pallas_aggregation)
-                delta = tree_unflatten_from_vector(delta_vec,
-                                                   global_params)
-                new_global, server_state = agg.apply(
-                    server_state, global_params, delta, losses=losses,
-                    idx=idx)
-            else:
-                new_global, server_state = agg.step(
-                    server_state, global_params, deltas, w, losses=losses,
-                    idx=idx)
+            new_global, server_state, new_r = pipe.reduce_apply(
+                server_state, global_params, deltas, w, keys,
+                losses=losses, idx=idx,
+                resid=resid[idx] if ef else None, byz_key=bk)
+            if ef:
+                resid = resid.at[idx].set(new_r)
             return new_global, opt_states, server_state, resid, losses
 
         def eval_fn(global_params, key):
@@ -386,8 +392,12 @@ class FederatedGPO:
             else:
                 opt_sub = jax.tree.map(lambda x: x[idx], opt_states)
             keys = jax.random.split(k_train, m)
+            bk = pipe.fold_key(key)
+            train_args = (client_params, opt_sub, keys, groups)
+            if pipe.flip_data:
+                train_args += (pipe.attacked_flags(bk, idx),)
             new_client_params, opt_sub, losses = jax.vmap(local_train)(
-                client_params, opt_sub, keys, groups)
+                *train_args)
             # opt states advance only where the round's local work
             # survived: offline clients never trained, crashed clients
             # lost theirs with the crash
@@ -398,14 +408,17 @@ class FederatedGPO:
                 return full.at[idx].set(jnp.where(k_, sub, full[idx]))
 
             opt_states = jax.tree.map(merge, opt_states, opt_sub)
-            # per-client release (DP then EF/codec, NO reduction): the
-            # EF21 residual rows advance exactly for releasing clients
+            # per-client release (pipeline stages 2-4: attack, DP, then
+            # EF/codec — NO reduction): a Byzantine row that straggles is
+            # buffered CORRUPTED, the §11 ∘ §13 composition. The EF21
+            # residual rows advance exactly for releasing clients
             # (fresh + stragglers — they do transmit, just late);
             # crashed/offline rows are untouched (delta never released).
             deltas = tree_sub(new_client_params, client_params)
             r_sub = resid[idx] if ef else None
-            rel_sub, new_r = cx.release_flat(
-                tree_ravel_clients(deltas), keys, priv, comp, r_sub)
+            rel_sub, new_r = pipe.release_rows(
+                tree_ravel_clients(deltas), keys, r_sub, byz_key=bk,
+                gids=idx)
             if ef:
                 resid = resid.at[idx].set(
                     jnp.where(keep[:, None], new_r, resid[idx]))
@@ -433,15 +446,11 @@ class FederatedGPO:
             n_released = (jnp.sum(sched.fresh.astype(jnp.int32))
                           + jnp.sum(sched.arrive.astype(jnp.int32)))
             any_surv = n_released > 0
-            # degraded-mode reduce: linear renormalizes over survivors;
-            # robust shrinks its trim depth with the survivor count
-            if agg.linear:
-                wn = av.masked_mean_weights(w_c, mask_c)
-                delta_vec = agg.reduce_flat(contrib, wn)
-            else:
-                delta_vec = av.masked_robust_reduce_flat(
-                    contrib, w_c, mask_c, name=agg.name,
-                    trim_frac=fed_cfg.agg.trim_frac)
+            # degraded-mode reduce (pipeline stage 5 under fault masking):
+            # linear renormalizes over survivors; robust shrinks its trim
+            # depth with the survivor count; defenses drop weight-0 rows
+            delta_vec = pipe.masked_reduce(
+                contrib, w_c, mask_c, trim_frac=fed_cfg.agg.trim_frac)
             delta = tree_unflatten_from_vector(delta_vec, global_params)
             kw = {}
             if agg.buffered:
@@ -702,6 +711,8 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
     gpo_cfg = fed_cfg.resolve_gpo(gpo_cfg)  # runtime attention override
     fed_cfg.privacy.validate()
     fed_cfg.compression.validate()
+    fed_cfg.adversary.validate()
+    byz.check_defense_composition(fed_cfg)
     priv = fed_cfg.privacy
     comp = fed_cfg.compression
     ef = comp.enabled and comp.error_feedback
@@ -710,102 +721,44 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
         agg = make_aggregator(fed_cfg.agg, num_clients=fed_cfg.num_clients,
                               use_pallas=fed_cfg.use_pallas_aggregation)
     local_train = _make_local_train(gpo_cfg, fed_cfg, data, opt)
+    # the same declared stage pipeline as the stacked engine (DESIGN.md
+    # §13): this body keeps the client layout and collective placement,
+    # the pipeline owns the stage dispatch. With the adversary enabled
+    # the round gains a trailing REPLICATED ``byz_key`` argument (the
+    # launcher folds it from the round key) — the attack-off signature,
+    # trace, and collective schedule are unchanged.
+    pipe = make_pipeline(fed_cfg, agg=agg, num_clients=fed_cfg.num_clients)
+    adv_on = fed_cfg.adversary.enabled
     axes = tuple(client_axes)
     spec = P(axes)
     repl = P()
 
+    def _shard_gids(c_local):
+        """This shard's global client ids, from the static mesh shape —
+        no collective."""
+        shard = 0
+        for a in axes:
+            shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
+        return shard * c_local + jnp.arange(c_local, dtype=jnp.int32)
+
     def round_body(client_params, opt_states, keys, group_ids, weights,
-                   server_state, resid=None):
+                   server_state, resid=None, byz_key=None):
         # local shard: (C_local, ...) clients; train without collectives
-        new_params, new_opt, losses = jax.vmap(local_train)(
-            client_params, opt_states, keys, group_ids)
+        gids = _shard_gids(keys.shape[0]) if adv_on else None
+        train_args = (client_params, opt_states, keys, group_ids)
+        if pipe.flip_data:
+            train_args += (pipe.attacked_flags(byz_key, gids),)
+        new_params, new_opt, losses = jax.vmap(local_train)(*train_args)
         # delta contract: entry params ARE the replicated global model
         deltas = tree_sub(new_params, client_params)
         global_prev = tree_index(client_params, 0)
-        new_resid = None
-        if comp.enabled:
-            # compressed transport (DESIGN.md §10): release + codec are
-            # shard-local; what crosses the wire afterwards is either
-            # the already-decompressed weighted sum (linear: one psum,
-            # unchanged schedule) or the compressed payload itself
-            # (robust: int8 + scales all-gather — the byte win).
-            vecs = tree_ravel_clients(deltas)
-            if agg.linear:
-                local_vec, new_resid = cx.transport_delta_flat(
-                    vecs, weights, keys, priv, comp, agg, resid,
-                    use_pallas=fed_cfg.use_pallas_aggregation)
-                delta = tree_unflatten_from_vector(
-                    jax.lax.psum(local_vec, axes), global_prev)
-            else:
-                x = (dp.privatize_flat(vecs, keys, priv) if priv.enabled
-                     else vecs.astype(jnp.float32))
-                u = x + resid if ef else x
-                if comp.kind == "int8":
-                    uniform = (cx.client_uniform(keys, u.shape)
-                               if comp.stochastic else None)
-                    q, scales = cx.quantize_int8(u, uniform=uniform)
-                    t_local = cx.dequantize_int8(q, scales)
-                    all_q = jax.lax.all_gather(q, axes, axis=0,
-                                               tiled=True)
-                    all_s = jax.lax.all_gather(scales, axes, axis=0,
-                                               tiled=True)
-                    all_vecs = cx.dequantize_int8(all_q, all_s)
-                else:  # topk: dense f32 layout of the sparsified shard
-                    t_local, _ = cx.sparsify_topk(u, comp.topk_frac)
-                    all_vecs = jax.lax.all_gather(t_local, axes, axis=0,
-                                                  tiled=True)
-                new_resid = u - t_local if ef else None
-                all_w = jax.lax.all_gather(weights, axes, axis=0,
-                                           tiled=True)
-                delta = tree_unflatten_from_vector(
-                    agg.reduce_flat(all_vecs, all_w), global_prev)
-        elif priv.enabled:
-            # DP release point (DESIGN.md §9): clip + noise the local
-            # shard's flat deltas before ANY collective — per-client
-            # norms are shard-local, so the psum/all-gather only ever
-            # carries privatized data.
-            vecs = tree_ravel_clients(deltas)
-            if agg.linear:
-                local_vec = dp.clip_noise_reduce(
-                    vecs, weights, keys, priv,
-                    use_pallas=fed_cfg.use_pallas_aggregation)
-                delta = tree_unflatten_from_vector(
-                    jax.lax.psum(local_vec, axes), global_prev)
-            else:
-                pvecs = dp.privatize_flat(vecs, keys, priv)
-                all_vecs = jax.lax.all_gather(pvecs, axes, axis=0,
-                                              tiled=True)
-                all_w = jax.lax.all_gather(weights, axes, axis=0,
-                                           tiled=True)
-                delta = tree_unflatten_from_vector(
-                    agg.reduce_flat(all_vecs, all_w), global_prev)
-        elif agg.linear:
-            if fed_cfg.use_pallas_aggregation:
-                # flatten the local client-delta shard to (C_local, P) in
-                # one vmapped ravel, reduce it with the Pallas delta-
-                # moment kernel, then ONE psum of the flat vector plays
-                # the aggregation server.
-                vecs = tree_ravel_clients(deltas)
-                local_vec = fedavg_reduce(vecs, weights.astype(jnp.float32))
-                delta_vec = jax.lax.psum(local_vec, axes)
-                delta = tree_unflatten_from_vector(delta_vec, global_prev)
-            else:
-                local_weighted = jax.tree.map(
-                    lambda x: jnp.sum(
-                        x.astype(jnp.float32)
-                        * weights.reshape((-1,) + (1,) * (x.ndim - 1)),
-                        axis=0),
-                    deltas)
-                delta = fedavg_allreduce(
-                    local_weighted, jnp.asarray(1.0, jnp.float32), axes)
-        else:
-            # robust reduce needs every client's delta: all-gather the
-            # flat (C_local, P) shard to (C, P), rank-trim locally.
-            vecs = tree_ravel_clients(deltas)
-            all_vecs = jax.lax.all_gather(vecs, axes, axis=0, tiled=True)
-            all_w = jax.lax.all_gather(weights, axes, axis=0, tiled=True)
-            delta = tree_unflatten_from_vector(
-                agg.reduce_flat(all_vecs, all_w), global_prev)
+        # pipeline stages 2-5 head: [attack →] privacy → codec → reduce
+        # collective (ONE weighted psum for the linear family, an
+        # all-gather of rows for the robust one — see
+        # RoundPipeline.sharded_delta for the full dispatch).
+        delta, new_resid = pipe.sharded_delta(
+            deltas, weights, keys, global_prev, resid, axes,
+            byz_key=byz_key, gids=gids)
         all_losses = (jax.lax.all_gather(losses, axes, axis=0, tiled=True)
                       if agg.needs_losses else None)
         # replicated server update: same inputs on every shard -> same
@@ -836,16 +789,15 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
 
     def fault_round_body(client_params, opt_states, keys, group_ids,
                          weights, server_state, fault, fault_key,
-                         resid=None):
+                         resid=None, byz_key=None):
         c_local = keys.shape[0]
         num_clients = weights.shape[0]  # replicated full population
-        shard = 0
-        for a in axes:  # static mesh shape: no collective for the index
-            shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
-        gids = shard * c_local + jnp.arange(c_local, dtype=jnp.int32)
+        gids = _shard_gids(c_local)
         sched = av.round_schedule(fault_key, fault, avail, num_clients)
-        new_params, new_opt, losses = jax.vmap(local_train)(
-            client_params, opt_states, keys, group_ids)
+        train_args = (client_params, opt_states, keys, group_ids)
+        if pipe.flip_data:
+            train_args += (pipe.attacked_flags(byz_key, gids),)
+        new_params, new_opt, losses = jax.vmap(local_train)(*train_args)
         deltas = tree_sub(new_params, client_params)
         global_prev = tree_index(client_params, 0)
         fresh_l = sched.fresh[gids]
@@ -854,10 +806,13 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
             lambda n, o: jnp.where(
                 keep_l.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
             new_opt, opt_states)
-        # shard-local per-client release; EF rows advance only where the
-        # client actually released (fresh or straggler-sent)
-        rel_l, new_r = cx.release_flat(
-            tree_ravel_clients(deltas), keys, priv, comp, resid)
+        # shard-local per-client [attack →] privacy → codec release; EF
+        # rows advance only where the client actually released (fresh or
+        # straggler-sent). A Byzantine straggler's BUFFERED payload is
+        # already corrupted — the attack rides §11's replay semantics.
+        rel_l, new_r = pipe.release_rows(
+            tree_ravel_clients(deltas), keys, resid,
+            byz_key=byz_key, gids=gids, axes=axes)
         new_resid = (jnp.where(keep_l[:, None], new_r, resid)
                      if ef else None)
         # contribution weights: replicated-computable from the schedule
@@ -879,21 +834,13 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
             (wc_l > 0.0)[:, None],
             (wf_l[:, None] * rel_l + wa_l[:, None] * fault.pending)
             / jnp.maximum(wc_l, 1e-12)[:, None], 0.0)
-        if agg.linear:
-            wn_l = av.masked_mean_weights(w_c, mask_c)[gids]
-            if fed_cfg.use_pallas_aggregation:
-                local_vec = fedavg_reduce(contrib_l, wn_l)
-            else:
-                local_vec = jnp.einsum("c,cp->p", wn_l, contrib_l)
-            delta = tree_unflatten_from_vector(
-                jax.lax.psum(local_vec, axes), global_prev)
-        else:
-            all_vecs = jax.lax.all_gather(contrib_l, axes, axis=0,
-                                          tiled=True)
-            delta = tree_unflatten_from_vector(
-                av.masked_robust_reduce_flat(
-                    all_vecs, w_c, mask_c, name=agg.name,
-                    trim_frac=fed_cfg.agg.trim_frac), global_prev)
+        # pipeline aggregate stage, degraded mode: norm bound clips the
+        # blended rows, then linear keeps the shard-local partial sum +
+        # ONE psum while robust/defense families all-gather the rows.
+        delta = tree_unflatten_from_vector(
+            pipe.masked_reduce_sharded(
+                contrib_l, w_c, mask_c, gids, axes,
+                trim_frac=fed_cfg.agg.trim_frac), global_prev)
         all_losses = (jax.lax.all_gather(losses, axes, axis=0, tiled=True)
                       if agg.needs_losses else None)
         kw = {}
@@ -932,42 +879,39 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
                 new_resid)
 
     faults = avail.enabled
+    # positional spec assembly: the base signature per engine, then the
+    # optional trailing args in fixed order — EF residual shard (spec),
+    # then replicated Byzantine key. Attack-off keeps the exact pre-§13
+    # tuples (and traces), so the lowered round is byte-identical.
     if faults:
         fault_spec = av.FaultState(
             round=repl, offline_until=repl, pending=spec,
             pending_due=repl, pending_weight=repl, pending_birth=repl)
         # weights replicated: every shard renormalizes the survivor mass
         # redundantly instead of spending a collective on it
-        if ef:
-            in_specs = (spec, spec, spec, spec, repl, repl, fault_spec,
-                        repl, spec)
-            out_specs = (spec, spec, spec, repl, fault_spec, spec)
-            body = fault_round_body
-        else:
-            in_specs = (spec, spec, spec, spec, repl, repl, fault_spec,
-                        repl)
-            out_specs = (spec, spec, spec, repl, fault_spec)
-
-            def body(client_params, opt_states, keys, group_ids, weights,
-                     server_state, fault, fault_key):
-                return fault_round_body(client_params, opt_states, keys,
-                                        group_ids, weights, server_state,
-                                        fault, fault_key)[:5]
-    elif ef:
-        in_specs = (spec, spec, spec, spec, spec, repl, spec)
-        out_specs = (spec, spec, spec, repl, spec)
-        body = round_body
+        in_specs = [spec, spec, spec, spec, repl, repl, fault_spec, repl]
+        out_specs = [spec, spec, spec, repl, fault_spec]
+        inner, n_out = fault_round_body, 5
     else:
-        in_specs = (spec, spec, spec, spec, spec, repl)
-        out_specs = (spec, spec, spec, repl)
+        in_specs = [spec, spec, spec, spec, spec, repl]
+        out_specs = [spec, spec, spec, repl]
+        inner, n_out = round_body, 4
+    if ef:
+        in_specs.append(spec)
+        out_specs.append(spec)
+    if adv_on:
+        in_specs.append(repl)
 
-        def body(client_params, opt_states, keys, group_ids, weights,
-                 server_state):
-            return round_body(client_params, opt_states, keys, group_ids,
-                              weights, server_state)[:4]
+    def body(*args):
+        base, rest = args[:len(in_specs) - ef - adv_on], \
+            args[len(in_specs) - ef - adv_on:]
+        resid = rest[0] if ef else None
+        bk = rest[-1] if adv_on else None
+        out = inner(*base, resid=resid, byz_key=bk)
+        return out if ef else out[:n_out]
 
-    sharded = shard_map(body, mesh=mesh, in_specs=in_specs,
-                        out_specs=out_specs, check_rep=False)
+    sharded = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                        out_specs=tuple(out_specs), check_rep=False)
 
     def round_fn(client_params, opt_states, keys, group_ids, weights,
                  server_state, *rest):

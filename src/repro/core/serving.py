@@ -91,7 +91,11 @@ class Request:
     two requests with the same key MUST carry identical (ctx_x, ctx_y);
     None disables caching for this request. ``arrival`` is seconds on
     the engine clock (load-generation metadata, not a scheduling
-    input)."""
+    input). ``deadline`` is an absolute engine-clock time past which the
+    result is worthless to the caller (an RLHF scorer that already timed
+    out): the scheduler drops the request instead of spending a decode
+    slot on it, counted in ``ServeStats.expired``. None means no
+    deadline."""
 
     rid: int
     ctx_x: np.ndarray  # (m*A, d_embed)
@@ -99,6 +103,7 @@ class Request:
     tgt_x: np.ndarray  # (t*A, d_embed)
     prefix_key: Optional[Hashable] = None
     arrival: float = 0.0
+    deadline: Optional[float] = None  # absolute engine-clock seconds
     meta: Optional[dict] = None  # caller-owned (e.g. group/question ids)
 
 
@@ -137,6 +142,7 @@ class ServeStats:
     cache_misses: int = 0
     prefills: int = 0  # unique contexts actually prefilled
     evictions: int = 0
+    expired: int = 0  # dropped unserved: deadline passed while queued
 
 
 # ---------------------------------------------------------------------------
@@ -255,7 +261,15 @@ class PreferenceServer:
         requests, prefill the cache misses (batched, at each request's
         own ctx bucket so cache entries are batch-composition-independent
         and hits stay bit-equal), gather everyone's prefix K/V, decode
-        once, complete."""
+        once, complete. Head-of-line requests whose ``deadline`` already
+        passed are dropped first (counted ``expired``, never decoded) —
+        under overload this sheds exactly the work nobody is waiting for
+        instead of letting it consume batch slots."""
+        now = self.now()
+        while (self._queue and self._queue[0].deadline is not None
+               and now >= self._queue[0].deadline):
+            self._queue.popleft()
+            self.stats.expired += 1
         if not self._queue:
             return []
         take = min(self.scfg.max_batch, len(self._queue))

@@ -23,7 +23,12 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import CompressionConfig, ModelConfig, PrivacyConfig
+from repro.configs.base import (
+    AdversaryConfig,
+    CompressionConfig,
+    ModelConfig,
+    PrivacyConfig,
+)
 from repro.core.aggregation import ServerAggregator
 from repro.core.fedavg import broadcast_to_clients, fedavg_stacked
 from repro.core.lora import apply_lora
@@ -32,9 +37,7 @@ from repro.models.layers import cross_entropy_loss
 from repro.optim import Optimizer
 from repro.utils.pytree import (
     tree_index,
-    tree_ravel_clients,
     tree_sub,
-    tree_unflatten_from_vector,
     tree_zeros_like,
 )
 
@@ -143,7 +146,8 @@ def _aggregated_round(local_train: Callable,
                       agg: Optional[ServerAggregator],
                       privacy: Optional[PrivacyConfig] = None,
                       use_pallas_aggregation: bool = False,
-                      compression: Optional[CompressionConfig] = None
+                      compression: Optional[CompressionConfig] = None,
+                      adversary: Optional[AdversaryConfig] = None
                       ) -> Callable:
     """Shared round tail for the backbone/LoRA federated trainers.
 
@@ -154,32 +158,54 @@ def _aggregated_round(local_train: Callable,
     (payload, opt_states, batches, weights, server_state) ->
     (payload, opt_states, losses, server_state).
     With an *enabled* ``privacy`` config (DESIGN.md §9; requires
-    ``agg``) the round gains a trailing per-round ``noise_key`` argument
-    and each client's flat delta is clipped + noised before the
+    ``agg``) each client's flat delta is clipped + noised before the
     aggregator, exactly as in the GPO engines
     (``use_pallas_aggregation`` routes the linear family through the
     fused ``agg_clip_reduce`` kernel, mirroring the GPO engines' flag).
     With an *enabled* ``compression`` config (DESIGN.md §10; requires
     ``agg``) the released deltas run through the int8/top-k codec before
-    the aggregator; the round signature grows, in order, a trailing
-    ``resid (C, P)`` EF-residual argument/result when
-    ``error_feedback`` is on, then the per-round ``round_key`` whenever
-    privacy noise or stochastic rounding needs randomness:
+    the aggregator. With an *enabled* ``adversary`` config (DESIGN.md
+    §13; requires ``agg``; delta-level kinds only — ``label_flip``
+    poisons survey preferences, which only the GPO engines hold)
+    Byzantine rows are corrupted before the privacy/codec release, and
+    ``agg.cfg.norm_bound > 0`` clips the received rows server-side.
+    The round signature grows, in order, a trailing ``resid (C, P)``
+    EF-residual argument/result when ``error_feedback`` is on, then the
+    per-round ``round_key`` whenever any stage needs randomness (DP
+    noise, stochastic rounding, or the Byzantine schedule/attack keys,
+    which fold out of it):
     (payload, opt_states, batches, weights, server_state[, resid]
      [, round_key]) -> (payload, opt_states, losses, server_state
      [, resid]).
+
+    All stage dispatch is delegated to ``RoundPipeline`` — this trainer
+    assembles the same declared [local_train, attack, privacy, codec,
+    aggregate] list as the GPO engines.
     """
     if privacy is not None:
         privacy.validate()
     if compression is not None:
         compression.validate()
+    if adversary is not None:
+        adversary.validate()
     private = privacy is not None and privacy.enabled
     compressed = compression is not None and compression.enabled
-    if (private or compressed) and agg is None:
-        raise ValueError("the DP delta pipeline and the compression stage"
-                         " ride the delta contract: pass a"
-                         " ServerAggregator (agg=) with privacy or"
-                         " compression")
+    adv_on = adversary is not None and adversary.enabled
+    if (private or compressed or adv_on) and agg is None:
+        raise ValueError("the DP delta pipeline, the compression stage,"
+                         " and the Byzantine attack stage ride the delta"
+                         " contract: pass a ServerAggregator (agg=) with"
+                         " privacy, compression, or adversary")
+    if adv_on and adversary.data_level:
+        # preference label flipping rewrites survey ICL batches inside
+        # federated._make_local_train; the backbone/LoRA local step is a
+        # plain LM loss over opaque token batches — failing loudly beats
+        # silently benchmarking an attack that never fired
+        raise ValueError(
+            "adversary.kind='label_flip' is only wired into the GPO "
+            "engine's local data pipeline (federated._make_local_train); "
+            "the backbone/LoRA trainers support the delta-level kinds "
+            "(sign_flip/scaled/gaussian/alie)")
     if agg is None:
         def round_fn(client_payload, opt_states, batches, weights):
             client_payload, opt_states, losses = jax.vmap(local_train)(
@@ -200,91 +226,47 @@ def _aggregated_round(local_train: Callable,
             "objective (federated._make_local_train); the backbone/LoRA "
             "trainers do not apply a proximal term")
 
-    def _finish(new_payload, client_payload, opt_states, losses, weights,
-                server_state, delta_override=None):
-        global_prev = tree_index(client_payload, 0)
-        if delta_override is None:
-            deltas = tree_sub(new_payload, client_payload)
-            global_payload, server_state = agg.step(
-                server_state, global_prev, deltas, weights, losses=losses,
-                idx=None)
-        else:
-            global_payload, server_state = agg.apply(
-                server_state, global_prev, delta_override, losses=losses,
-                idx=None)
-        num_clients = weights.shape[0]
-        return (broadcast_to_clients(global_payload, num_clients),
-                opt_states, losses, server_state)
+    from repro.configs.base import CompressionConfig as _CC
+    from repro.configs.base import PrivacyConfig as _PC
+    from repro.core.pipeline import RoundPipeline
 
-    if compressed:
-        from repro.core import compression as cx
-        from repro.configs.base import PrivacyConfig as _PC
-
-        priv = privacy if privacy is not None else _PC()
-        ef = compression.error_feedback
-        need_key = private or compression.needs_rng
-
-        def round_fn(client_payload, opt_states, batches, weights,
-                     server_state, *extra):
-            expect = int(ef) + int(need_key)
-            if len(extra) != expect:
-                raise TypeError(
-                    f"compressed round expects {expect} trailing arg(s) "
-                    f"([resid]={ef}, [round_key]={need_key}); "
-                    f"got {len(extra)}")
-            resid = extra[0] if ef else None
-            round_key = extra[-1] if need_key else None
-            new_payload, opt_states, losses = jax.vmap(local_train)(
-                client_payload, opt_states, batches)
-            # compressed transport (DESIGN.md §10): DP release first (ε
-            # is a property of the release; the codec is
-            # post-processing), then EF + codec, then the reduction.
-            deltas = tree_sub(new_payload, client_payload)
-            keys = (jax.random.split(round_key, weights.shape[0])
-                    if need_key else None)
-            w_eff = agg.weigh(server_state, weights, None)
-            delta_vec, new_resid = cx.transport_delta_flat(
-                tree_ravel_clients(deltas), w_eff, keys, priv,
-                compression, agg, resid,
-                use_pallas=use_pallas_aggregation)
-            delta = tree_unflatten_from_vector(
-                delta_vec, tree_index(client_payload, 0))
-            out = _finish(new_payload, client_payload, opt_states, losses,
-                          weights, server_state, delta_override=delta)
-            return out + (new_resid,) if ef else out
-
-        return round_fn
-
-    if private:
-        from repro.core import privacy as dp
-
-        def round_fn(client_payload, opt_states, batches, weights,
-                     server_state, noise_key):
-            new_payload, opt_states, losses = jax.vmap(local_train)(
-                client_payload, opt_states, batches)
-            # DP pipeline (DESIGN.md §9): clip + per-client noise on the
-            # flat deltas before the aggregator, per-client keys split
-            # off the round's noise_key.
-            deltas = tree_sub(new_payload, client_payload)
-            keys = jax.random.split(noise_key, weights.shape[0])
-            w_eff = agg.weigh(server_state, weights, None)
-            delta_vec = dp.private_delta_flat(
-                tree_ravel_clients(deltas), w_eff, keys, privacy, agg,
-                use_pallas=use_pallas_aggregation)
-            delta = tree_unflatten_from_vector(
-                delta_vec, tree_index(client_payload, 0))
-            return _finish(new_payload, client_payload, opt_states, losses,
-                           weights, server_state, delta_override=delta)
-
-        return round_fn
+    pipe = RoundPipeline(
+        adversary=adversary if adversary is not None else AdversaryConfig(),
+        privacy=privacy if privacy is not None else _PC(),
+        compression=compression if compression is not None else _CC(),
+        agg=agg, num_clients=None, use_pallas=use_pallas_aggregation)
+    ef = compressed and compression.error_feedback
+    # the release stages need per-client keys (DP noise or stochastic
+    # rounding); the Byzantine schedule folds its own key out of the
+    # round key. Either demand puts round_key in the signature.
+    release_needs_key = private or (compressed and compression.needs_rng)
+    need_key = release_needs_key or adv_on
 
     def round_fn(client_payload, opt_states, batches, weights,
-                 server_state):
+                 server_state, *extra):
+        expect = int(ef) + int(need_key)
+        if len(extra) != expect:
+            raise TypeError(
+                f"round expects {expect} trailing arg(s) "
+                f"([resid]={ef}, [round_key]={need_key}); "
+                f"got {len(extra)}")
+        resid = extra[0] if ef else None
+        round_key = extra[-1] if need_key else None
         new_payload, opt_states, losses = jax.vmap(local_train)(
             client_payload, opt_states, batches)
-        # entry payload is the replicated global from the last round
-        return _finish(new_payload, client_payload, opt_states, losses,
-                       weights, server_state)
+        # pipeline tail (DESIGN.md §13): [attack →] privacy → codec →
+        # aggregate on the flat client deltas; full participation, so
+        # rows ARE the population (idx=None).
+        deltas = tree_sub(new_payload, client_payload)
+        keys = (jax.random.split(round_key, weights.shape[0])
+                if release_needs_key else None)
+        bk = pipe.fold_key(round_key)
+        global_payload, server_state, new_resid = pipe.reduce_apply(
+            server_state, tree_index(client_payload, 0), deltas, weights,
+            keys, losses=losses, idx=None, resid=resid, byz_key=bk)
+        out = (broadcast_to_clients(global_payload, weights.shape[0]),
+               opt_states, losses, server_state)
+        return out + (new_resid,) if ef else out
 
     return round_fn
 
@@ -295,6 +277,8 @@ def make_backbone_fedavg_round(cfg: ModelConfig, opt: Optimizer,
                                privacy: Optional[PrivacyConfig] = None,
                                use_pallas_aggregation: bool = False,
                                compression: Optional[CompressionConfig]
+                               = None,
+                               adversary: Optional[AdversaryConfig]
                                = None) -> Callable:
     """Full-parameter federated round over backbones (feasible <= few-B
     params).
@@ -320,7 +304,8 @@ def make_backbone_fedavg_round(cfg: ModelConfig, opt: Optimizer,
         return params, opt_state, jnp.mean(losses)
 
     return _aggregated_round(local_train, agg, privacy,
-                             use_pallas_aggregation, compression)
+                             use_pallas_aggregation, compression,
+                             adversary)
 
 
 def make_fedlora_round(cfg: ModelConfig, frozen_params, opt: Optimizer,
@@ -328,7 +313,8 @@ def make_fedlora_round(cfg: ModelConfig, frozen_params, opt: Optimizer,
                        agg: Optional[ServerAggregator] = None,
                        privacy: Optional[PrivacyConfig] = None,
                        use_pallas_aggregation: bool = False,
-                       compression: Optional[CompressionConfig] = None
+                       compression: Optional[CompressionConfig] = None,
+                       adversary: Optional[AdversaryConfig] = None
                        ) -> Callable:
     """Federated LoRA adapters with a frozen (shared) backbone — the
     production recipe for grok-1-class archs (DESIGN.md §3). The adapter
@@ -351,4 +337,5 @@ def make_fedlora_round(cfg: ModelConfig, frozen_params, opt: Optimizer,
         return lora, opt_state, jnp.mean(losses)
 
     return _aggregated_round(local_train, agg, privacy,
-                             use_pallas_aggregation, compression)
+                             use_pallas_aggregation, compression,
+                             adversary)

@@ -8,6 +8,7 @@
 from repro.kernels.ops import (  # noqa: F401
     agg_clip_reduce,
     agg_momentum_reduce,
+    agg_pairwise_dists,
     agg_quant_clip_reduce,
     agg_topk_reduce,
     agg_trimmed_reduce,

@@ -517,3 +517,50 @@ def trimmed_reduce_flat(stacked: jnp.ndarray, weights: jnp.ndarray, *,
         interpret=interpret,
     )(w2, stacked)
     return out[0, :p]
+
+
+def _pairwise_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)  # (C, bp)
+    sq = jnp.sum(x * x, axis=1)  # (C,)
+    part = sq[:, None] + sq[None, :] - 2.0 * jnp.dot(
+        x, x.T, preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += part.astype(o_ref.dtype)
+
+
+def pairwise_dists_flat(stacked: jnp.ndarray, *,
+                        block: int = DEFAULT_BLOCK,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """stacked (C, P) deltas -> (C, C) pairwise SQUARED L2 distances —
+    the Krum/multi-Krum selection metric (DESIGN.md §13).
+
+    The (C, C) Gram-style output is tiny (clients are tens, not
+    thousands) and pins at block (0, 0) across the whole (nb,) sweep;
+    each grid step streams one (C, bp) tile of the flattened parameter
+    axis and accumulates the expansion form ‖x_i‖² + ‖x_j‖² − 2·x_i·x_j
+    via one (C, bp) × (bp, C) matmul — the full P-axis never sits in
+    VMEM, and HBM is read exactly once. Padded columns are zeros, so
+    they add 0 to every entry. Accumulated float error can push an
+    entry infinitesimally negative; the wrapper clamps at 0 (distances
+    are provably non-negative), keeping downstream sqrt/sort sane.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    c, p = stacked.shape
+    stacked, pp = _pad_cols(stacked.astype(jnp.float32), block)
+    nb = pp // block
+
+    out = pl.pallas_call(
+        _pairwise_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((c, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((c, c), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, c), jnp.float32),
+        interpret=interpret,
+    )(stacked)
+    return jnp.maximum(out, 0.0)

@@ -15,6 +15,7 @@ from repro.kernels.agg_reduce import (
     clip_reduce_flat,
     fedavg_reduce_flat,
     momentum_reduce_flat,
+    pairwise_dists_flat,
     quant_clip_reduce_flat,
     topk_reduce_flat,
     trimmed_reduce_flat,
@@ -184,6 +185,18 @@ def agg_topk_reduce(stacked, weights, thresholds, *,
     return topk_reduce_flat(stacked, weights, thresholds,
                             with_residual=with_residual, block=block,
                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def agg_pairwise_dists(stacked, *, block: int = 2048,
+                       interpret: bool | None = None):
+    """stacked (C, P) client deltas -> (C, C) pairwise squared L2
+    distances over the flattened parameter axis — the Krum/multi-Krum
+    selection metric (DESIGN.md §13). One streaming sweep of the (C, P)
+    matrix; the tiny (C, C) output accumulates in VMEM."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return pairwise_dists_flat(stacked, block=block, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("trim", "block", "interpret"))

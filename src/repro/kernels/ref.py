@@ -194,3 +194,12 @@ def ref_trimmed_flat(stacked, weights, *, trim):
     num = jnp.sum(keep * ws * xs, axis=0)
     den = jnp.sum(keep * ws, axis=0)
     return (num / den).astype(stacked.dtype)
+
+
+def ref_pairwise_sq_dists(stacked):
+    """(C, P) deltas -> (C, C) pairwise squared L2 distances via the
+    direct difference form sum_p (x_i[p] − x_j[p])² — no expansion
+    trick, so the Pallas kernel's ‖x_i‖² + ‖x_j‖² − 2·x_i·x_j
+    accumulation is genuinely independent of this oracle."""
+    x = stacked.astype(jnp.float32)
+    return jnp.sum((x[:, None, :] - x[None, :, :]) ** 2, axis=-1)

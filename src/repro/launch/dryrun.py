@@ -176,6 +176,9 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
                     compress: str = "none",
                     topk_frac: float = 0.01,
                     faults: bool = False,
+                    attack: str = "none",
+                    attackers: int = 0,
+                    norm_bound: float = 0.0,
                     verbose: bool = True) -> dict:
     """Compile the shard_map federated GPO round for one aggregation
     strategy on a ``clients``-device 'data' mesh and report its
@@ -203,9 +206,9 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
     parameter-sized psum — tests/test_availability.py pins the byte
     counts equal to the fault-free round."""
     from jax.sharding import NamedSharding
-    from repro.configs import (AggConfig, AvailabilityConfig,
-                               CompressionConfig, FedConfig, GPOConfig,
-                               PrivacyConfig)
+    from repro.configs import (AdversaryConfig, AggConfig,
+                               AvailabilityConfig, CompressionConfig,
+                               FedConfig, GPOConfig, PrivacyConfig)
     from repro.core import make_aggregator
     from repro.core.availability import init_fault_state
     from repro.core.federated import make_sharded_round
@@ -229,12 +232,16 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
     avail = (AvailabilityConfig(online_prob=0.8, crash_prob=0.05,
                                 straggler_prob=0.1, max_staleness=4)
              if faults else AvailabilityConfig())
+    adversary = AdversaryConfig(kind=attack, num_attackers=attackers)
     fcfg = FedConfig(num_clients=clients, local_epochs=2, num_context=6,
-                     num_target=6, agg=AggConfig(name=agg_name),
+                     num_target=6,
+                     agg=AggConfig(name=agg_name,
+                                   num_malicious=attackers,
+                                   norm_bound=norm_bound),
                      use_pallas_aggregation=use_pallas,
                      use_pallas_attention=use_pallas_attention,
                      privacy=privacy, compression=compression,
-                     avail=avail)
+                     avail=avail, adversary=adversary)
     opt = adam(fcfg.lr)
     agg = make_aggregator(fcfg.agg, num_clients=clients,
                           use_pallas=use_pallas)
@@ -273,6 +280,10 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
         args += (jax.ShapeDtypeStruct(
             (clients, tree_count_params(params)), jnp.float32,
             sharding=spec),)
+    if adversary.enabled:
+        # replicated Byzantine key, LAST (after the EF residual) per the
+        # round's trailing-arg order
+        args += (jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=repl),)
 
     t0 = time.time()
     lowered = jax.jit(round_fn).lower(*args)
@@ -293,6 +304,9 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
         "compress": compress,
         "topk_frac": topk_frac if compress == "topk" else None,
         "faults": faults,
+        "attack": attack,
+        "attackers": attackers,
+        "norm_bound": norm_bound,
         "linear": agg.linear,
         "compile_s": round(time.time() - t0, 1),
         "collective_bytes_by_kind": dict(coll.bytes_by_kind),
@@ -306,6 +320,9 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
         print(f"== gpo-fed round x agg={agg_name} mesh={clients}"
               + (f" compress={compress}" if compress != "none" else "")
               + (" faults" if faults else "")
+              + (f" attack={attack}({attackers})" if attack != "none"
+                 else "")
+              + (f" norm_bound={norm_bound}" if norm_bound else "")
               + " ==")
         print("collectives:", result["collective_bytes_by_kind"])
         print("collectives (hlo_cost, trip-aware):",
@@ -350,6 +367,17 @@ def main() -> None:
                          "injection layer (DESIGN.md §11): replicated "
                          "failure schedule, masked survivor weights — "
                          "the linear family must keep its ONE psum")
+    ap.add_argument("--attack", default="none",
+                    choices=["none", "sign_flip", "scaled", "gaussian",
+                             "alie", "label_flip"],
+                    help="compile the --gpo-fed round with the Byzantine "
+                         "attack stage (DESIGN.md §13); linear family "
+                         "keeps its collective schedule byte-identical")
+    ap.add_argument("--attackers", type=int, default=2,
+                    help="Byzantine clients per round for --attack")
+    ap.add_argument("--norm-bound", type=float, default=0.0,
+                    help="server-side L2 norm bound on received rows "
+                         "(0 = off)")
     ap.add_argument("--out", default=None, help="append result as json line")
     args = ap.parse_args()
     if not args.gpo_fed and not (args.arch and args.shape):
@@ -358,7 +386,9 @@ def main() -> None:
             + (" private" if args.private else "")
             + (f" compress={args.compress}" if args.compress != "none"
                else "")
-            + (" faults" if args.faults else "") if args.gpo_fed
+            + (" faults" if args.faults else "")
+            + (f" attack={args.attack}" if args.attack != "none"
+               else "") if args.gpo_fed
             else f"{args.arch} x {args.shape} multi_pod={args.multi_pod}")
     try:
         if args.gpo_fed:
@@ -369,7 +399,10 @@ def main() -> None:
                 noise_multiplier=(args.noise_multiplier if args.private
                                   else 0.0),
                 compress=args.compress, topk_frac=args.topk_frac,
-                faults=args.faults)
+                faults=args.faults,
+                attack=args.attack,
+                attackers=args.attackers if args.attack != "none" else 0,
+                norm_bound=args.norm_bound)
         else:
             result = lower_pair(args.arch, args.shape,
                                 multi_pod=args.multi_pod)

@@ -160,6 +160,16 @@ def fault_state_shardings(mesh, client_axes=("data",)) -> PyTree:
         pending_birth=repl)
 
 
+def byz_key_sharding(mesh) -> NamedSharding:
+    """Sharding for the round's Byzantine key (DESIGN.md §13): REPLICATED,
+    like the §11 fault key — every shard derives the full-population
+    attacker mask from the one (2,) uint32 key (``adversary.
+    fold_byz_key`` of the round key), spending no collective on agreeing
+    who is corrupt. It is the round's LAST trailing argument (after the
+    EF residual, when present)."""
+    return NamedSharding(mesh, P())
+
+
 def adafactor_state_shardings(p_shard: PyTree, params_shapes: PyTree, mesh):
     """AdafactorState: v_row drops the param's last dim, v_col its
     second-to-last; v_full only exists for <2-D leaves (replicated)."""

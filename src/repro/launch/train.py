@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import (
+    AdversaryConfig,
     AggConfig,
     CompressionConfig,
     FedConfig,
@@ -125,12 +126,37 @@ def main() -> None:
                          "(--compress topk)")
     ap.add_argument("--no-error-feedback", action="store_true",
                     help="disable the EF21 error-feedback residual")
+    # Byzantine attack simulation + defenses (DESIGN.md §13). --attack
+    # none (default) disables the stage; pick a defense with --agg
+    # krum/multi_krum/geomedian/median and/or --norm-bound.
+    ap.add_argument("--attack", default="none",
+                    choices=["none", "sign_flip", "scaled", "gaussian",
+                             "alie", "label_flip"],
+                    help="per-round Byzantine client attack (label_flip "
+                         "is gpo-only)")
+    ap.add_argument("--attackers", type=int, default=0,
+                    help="number of Byzantine clients per round (also "
+                         "the defenses' assumed f)")
+    ap.add_argument("--attack-scale", type=float, default=10.0,
+                    help="model-replacement factor for --attack scaled")
+    ap.add_argument("--norm-bound", type=float, default=0.0,
+                    help="server-side per-client L2 norm bound on "
+                         "received deltas (0 = off)")
+    ap.add_argument("--multi-krum-m", type=int, default=3,
+                    help="rows averaged by --agg multi_krum")
     args = ap.parse_args()
 
     agg_cfg = AggConfig(name=args.agg, server_lr=args.server_lr,
                         momentum=args.server_momentum,
                         prox_mu=args.prox_mu, trim_frac=args.trim_frac,
-                        fair_temp=args.fair_temp)
+                        fair_temp=args.fair_temp,
+                        num_malicious=args.attackers,
+                        multi_krum_m=args.multi_krum_m,
+                        norm_bound=args.norm_bound)
+    adv_cfg = AdversaryConfig(kind=args.attack,
+                              num_attackers=args.attackers,
+                              scale=args.attack_scale)
+    adv_cfg.validate()
     priv_cfg = PrivacyConfig(clip_norm=args.clip_norm,
                              noise_multiplier=args.noise_multiplier,
                              target_delta=args.dp_delta)
@@ -146,7 +172,7 @@ def main() -> None:
         gcfg = GPOConfig(d_embed=data.phi.shape[-1])
         fcfg = FedConfig(num_clients=len(tr), rounds=args.rounds,
                          seed=args.seed, agg=agg_cfg, privacy=priv_cfg,
-                         compression=comp_cfg)
+                         compression=comp_cfg, adversary=adv_cfg)
         fed = FederatedGPO(gcfg, fcfg, data, tr, ev)
         hist = fed.run(rounds=args.rounds, log_every=10)
         print(f"final loss={hist.round_loss[-1]:.4f} "
@@ -189,7 +215,7 @@ def main() -> None:
             opt_states = jax.vmap(opt.init)(client_params)
             rnd = jax.jit(make_backbone_fedavg_round(
                 cfg, opt, args.local_steps, agg=agg, privacy=priv_cfg,
-                compression=comp_cfg))
+                compression=comp_cfg, adversary=adv_cfg))
             server_state = agg.init(params)
             payload = params
         else:
@@ -198,7 +224,8 @@ def main() -> None:
             opt_states = jax.vmap(opt.init)(client_params)
             rnd = jax.jit(make_fedlora_round(
                 cfg, params, opt, args.local_steps, agg=agg,
-                privacy=priv_cfg, compression=comp_cfg))
+                privacy=priv_cfg, compression=comp_cfg,
+                adversary=adv_cfg))
             server_state = agg.init(lora)
             payload = lora
         # full participation => sampling rate 1 for the accountant
@@ -206,20 +233,19 @@ def main() -> None:
         noise_base = jax.random.PRNGKey(args.seed + 17)
         # EF residual (DESIGN.md §10): one flat f32 row per client
         ef = comp_cfg.enabled and comp_cfg.error_feedback
-        need_key = (comp_cfg.enabled
-                    and (priv_cfg.enabled or comp_cfg.needs_rng))
+        # trailing-arg contract of _aggregated_round: [resid][, round_key]
+        need_key = (priv_cfg.enabled
+                    or (comp_cfg.enabled and comp_cfg.needs_rng)
+                    or adv_cfg.enabled)
         resid = (jnp.zeros((c, tree_count_params(payload)), jnp.float32)
                  if ef else None)
         for r in range(args.rounds):
             batches = _stack_client_batches(it, c, args.local_steps)
             round_args = (client_params, opt_states, batches, weights,
                           server_state)
-            if comp_cfg.enabled:
-                if ef:
-                    round_args += (resid,)
-                if need_key:
-                    round_args += (jax.random.fold_in(noise_base, r),)
-            elif priv_cfg.enabled:
+            if ef:
+                round_args += (resid,)
+            if need_key:
                 round_args += (jax.random.fold_in(noise_base, r),)
             out = rnd(*round_args)
             client_params, opt_states, losses, server_state = out[:4]

@@ -93,6 +93,51 @@ def test_torn_write_mid_serialize(tmp_path, rng, monkeypatch):
                                   np.full((3,), 2.0, np.float32))
 
 
+def test_flipped_byte_fails_checksum(tmp_path, rng):
+    """Silent bit rot after a durable save: one flipped byte in the
+    stored payload must fail the CRC32 content check with ValueError
+    (the type launch/serve.py's --restore path already converts to an
+    actionable SystemExit) — never restore corrupted weights."""
+    import os
+
+    tree = {"w": jax.random.normal(rng, (16, 16)),
+            "b": jnp.arange(8.0)}
+    path = save_checkpoint(str(tmp_path), 1, tree)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restore_checkpoint(path, like)  # pristine file passes
+
+    raw = bytearray(open(path, "rb").read())
+    # flip a byte inside the stored array payload (zip local headers sit
+    # at the front; the middle of the file is leaf bytes for this size)
+    raw[len(raw) // 2] ^= 0xFF
+    bad = str(tmp_path / "ckpt_corrupt.npz")
+    with open(bad, "wb") as f:
+        f.write(bytes(raw))
+    with pytest.raises(ValueError):
+        restore_checkpoint(bad, like)
+
+    # truncation (a partial copy) must also surface as ValueError, not a
+    # leaked zipfile.BadZipFile
+    trunc = str(tmp_path / "ckpt_trunc.npz")
+    with open(trunc, "wb") as f:
+        f.write(bytes(raw[: len(raw) // 3]))
+    with pytest.raises((ValueError, KeyError)):
+        restore_checkpoint(trunc, like)
+    assert os.path.exists(path)
+
+
+def test_pre_checksum_checkpoint_still_loads(tmp_path, rng):
+    """Checkpoints written before the __crc32__ entry existed (or by
+    other tools) must keep loading — the checksum is verified only when
+    present."""
+    tree = {"w": jnp.full((3, 3), 2.0)}
+    legacy = str(tmp_path / "ckpt_00000001.npz")
+    np.savez(legacy, **{"['w']": np.full((3, 3), 2.0, np.float32)})
+    restored = restore_checkpoint(legacy, {"w": jnp.zeros((3, 3))})
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
 def test_optimizer_state_roundtrip(tmp_path, rng):
     params = {"w": jax.random.normal(rng, (5, 5))}
     opt = adam(1e-3)

@@ -256,6 +256,61 @@ def test_survey_preferences_are_distributions(groups, questions, seed):
     assert bool(jnp.all(data.sizes >= 1))
 
 
+@settings(**SETTINGS)
+@given(st.integers(5, 10), st.integers(2, 40),
+       st.floats(2.0, 100.0), st.integers(0, 2 ** 31 - 1))
+def test_defenses_bounded_near_honest_envelope(c, p, scale, seed):
+    """Robustness invariant (DESIGN.md §13): with f attackers below the
+    breakdown point shipping arbitrarily scaled rows, Krum and the
+    geometric median land within a PROVABLE slack of the honest
+    coordinate-wise envelope [lo, hi].
+
+    The naive "inside the honest envelope" claim is false (an attacker
+    can pull the geometric median slightly outside it), so each defense
+    gets its own derived bound around the honest mean m, with
+    r = max_i ||honest_i - m||:
+
+    * Krum with nn = C − f − 2 neighbors and C − 2f − 2 ≥ 1: the
+      winner's score is ≤ the best honest score ≤ nn·(2r)², and at
+      least one of its nn neighbors is honest, so the selected row is
+      within 2r·√nn + r of m.
+    * geomedian with attacker weight fraction α < 1/2: the classic
+      aggregation lemma gives ||gm − m|| ≤ 2(1−α)r/(1−2α) (plus
+      Weiszfeld smoothing/iteration slack).
+
+    Both bounds are independent of the attack ``scale`` — that is the
+    robustness being asserted; fedavg's error grows linearly in it.
+    """
+    from repro.core.aggregation import geometric_median_flat, krum_scores
+
+    f = (c - 3) // 2  # breakdown condition C - 2f - 2 >= 1
+    key = jax.random.PRNGKey(seed)
+    honest = jax.random.normal(key, (c - f, p))
+    x = jnp.concatenate(
+        [honest, scale * jnp.ones((f, p), jnp.float32)], axis=0)
+    w = jnp.full((c,), 1.0 / c, jnp.float32)
+
+    m = jnp.mean(honest, axis=0)
+    r = float(jnp.max(jnp.linalg.norm(honest - m[None, :], axis=1)))
+    lo = np.asarray(honest.min(axis=0))
+    hi = np.asarray(honest.max(axis=0))
+
+    # krum: the implementation's selection with its own nn clamp
+    scores = krum_scores(x, w, f)
+    sel = np.asarray(x[jnp.argmin(scores)])
+    nn = max(1, c - f - 2)
+    b_krum = 2.0 * r * np.sqrt(nn) + r
+    assert np.all(sel >= lo - b_krum - 1e-4)
+    assert np.all(sel <= hi + b_krum + 1e-4)
+
+    # geomedian: attacker mass fraction alpha = f/c < 1/2
+    alpha = f / c
+    gm = np.asarray(geometric_median_flat(x, w, iters=50, eps=1e-6))
+    b_gm = 2.0 * (1.0 - alpha) * r / (1.0 - 2.0 * alpha) + 0.05 * r
+    assert np.all(gm >= lo - b_gm - 1e-3)
+    assert np.all(gm <= hi + b_gm + 1e-3)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1))
 def test_adam_step_finite_and_descends_quadratic(seed):

@@ -383,3 +383,66 @@ def test_serve_restore_shape_mismatch_clear_error(tmp_path):
     save_checkpoint(str(tmp_path), 1, other)
     with pytest.raises(SystemExit, match="does not match"):
         _restore_params(str(tmp_path), CFG, seed=0)
+
+
+def test_serve_restore_flipped_byte_clear_error(tmp_path):
+    """Silent corruption AFTER a durable save: the CRC32 content check
+    fails as ValueError inside restore_checkpoint and rides
+    _restore_params' actionable SystemExit path."""
+    from repro.launch.serve import _restore_params
+
+    params = init_gpo_params(CFG, jax.random.PRNGKey(0))
+    path = save_checkpoint(str(tmp_path), 1, params)
+    raw = bytearray(open(path, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF
+    with open(path, "wb") as f:
+        f.write(bytes(raw))
+    with pytest.raises(SystemExit, match="unreadable or does not match"):
+        _restore_params(str(tmp_path), CFG, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# per-request deadlines (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+def test_expired_head_of_line_requests_dropped():
+    """Queued requests whose deadline already passed must be dropped at
+    dispatch — counted in stats.expired, never decoded, never completed
+    — while live requests behind them still serve."""
+    srv = PreferenceServer(_params(0), CFG, SCFG, num_options=5)
+    dead = [_request(i, 30 + i) for i in range(2)]
+    for r in dead:
+        r.deadline = -1.0  # already expired on the engine clock
+        srv.submit(r)
+    live = _request(7, 40)
+    live.deadline = srv.now() + 60.0  # comfortably in the future
+    srv.submit(live)
+    out = srv.step()
+    assert [c.rid for c in out] == [7]
+    assert srv.stats.expired == 2
+    assert srv.stats.completed == 1
+    # the dropped rids never reached a batch record
+    assert all(0 not in b.rids and 1 not in b.rids for b in srv.batches)
+
+
+def test_deadline_none_never_expires():
+    """Requests without a deadline keep the pre-deadline behavior
+    exactly: nothing is dropped, stats.expired stays 0."""
+    srv = PreferenceServer(_params(0), CFG, SCFG, num_options=5)
+    for i in range(3):
+        srv.submit(_request(i, 50 + i))
+    out = srv.step()
+    assert sorted(c.rid for c in out) == [0, 1, 2]
+    assert srv.stats.expired == 0
+
+
+def test_all_expired_queue_drains_without_batch():
+    """A queue of only-expired work drains to nothing: step() returns []
+    and dispatches no batch (no decode slot is wasted)."""
+    srv = PreferenceServer(_params(0), CFG, SCFG, num_options=5)
+    for i in range(3):
+        r = _request(i, 55 + i)
+        r.deadline = -1.0
+        srv.submit(r)
+    assert srv.step() == []
+    assert srv.stats.expired == 3 and not srv.batches
+    assert srv.queue_depth == 0
