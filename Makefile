@@ -4,7 +4,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-fast test-priv test-comm test-async test-serve \
-	test-byz test-cov bench bench-round bench-serve bench-smoke
+	test-byz test-hier test-cov bench bench-round bench-serve bench-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -38,6 +38,11 @@ test-serve:
 test-byz:
 	$(PY) -m pytest -q tests/test_adversary.py tests/test_property.py
 
+# quick iteration on the client→edge→server hierarchy + the federation
+# bugfix regression tests that rode along (DESIGN.md §14)
+test-hier:
+	$(PY) -m pytest -q tests/test_hierarchy.py tests/test_fedavg.py
+
 # tier-1 suite under pytest-cov (the CI job uploads coverage.xml as a
 # non-gating artifact; requires pytest-cov from requirements-dev.txt)
 test-cov:
@@ -53,11 +58,12 @@ bench-serve:
 # reduced-config benchmark pass for the CI smoke job: exercises every
 # BENCH_*.json writer (round engine, aggregator sweep, attention
 # fwd+bwd, DP delta pipeline, compressed transport, fault tolerance,
-# Byzantine grid, serving engine) in a few minutes
+# Byzantine grid, hierarchy two-hop, serving engine) in a few minutes
 bench-smoke:
 	$(PY) -m benchmarks.bench_round --rounds 30 --agg-rounds 10 --reps 2 \
 		--privacy --priv-rounds 30 --compress --comm-rounds 30 \
-		--faults --async-rounds 30 --byzantine --byz-rounds 25
+		--faults --async-rounds 30 --byzantine --byz-rounds 25 \
+		--hierarchy --hier-rounds 30
 	$(PY) -m benchmarks.bench_serve --requests 24 --train-rounds 5 \
 		--reps 2 --rates 25,50,100
 

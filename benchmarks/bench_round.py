@@ -120,6 +120,8 @@ ASYNC_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                               "BENCH_async.json")
 BYZ_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_byz.json")
+HIER_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_hier.json")
 
 
 def _pallas_mode() -> str:
@@ -571,7 +573,7 @@ def bench_privacy(rounds: int, c: int = 32, p: int = 1_000_000,
 # 6. compressed transport: wire bytes, fused kernel, convergence
 # ---------------------------------------------------------------------------
 def _lower_comm_bytes(compress: str, agg: str = "median",
-                      clients: int = 8) -> dict:
+                      clients: int = 8, edges: int = 1) -> dict:
     """Compile the sharded round in a SUBPROCESS ``dryrun --gpo-fed`` and
     return its collective byte counts. A subprocess because the forced
     multi-device host platform must be set before jax import, which this
@@ -584,7 +586,7 @@ def _lower_comm_bytes(compress: str, agg: str = "median",
         path = f.name
     cmd = [sys.executable, "-m", "repro.launch.dryrun", "--gpo-fed",
            "--agg", agg, "--compress", compress, "--clients", str(clients),
-           "--out", path]
+           "--edges", str(edges), "--out", path]
     try:
         try:
             subprocess.run(cmd, check=True, capture_output=True, text=True,
@@ -978,6 +980,109 @@ def bench_byzantine(rounds: int, reps: int = 2) -> dict:
     return result
 
 
+def bench_hierarchy(rounds: int, reps: int = 2,
+                    skip_lower: bool = False) -> dict:
+    """Two-level client→edge→server aggregation (DESIGN.md §14).
+
+    Bytes: the COMPILED sharded-round collective schedule, flat vs the
+    ('edge', 'data') two-hop mesh, read per-op from the optimized HLO
+    via ``launch/hlo_cost.py``: the robust family's O(C·P) all-gather
+    splits into an intra-edge (C/E)·P hop plus a cross-edge E·P hop,
+    and with the §10 int8 codec the cross-edge hop shrinks 4x again
+    (multiplicative). The linear family's all-reduce total is recorded
+    unchanged — a torus all-reduce already IS the composed two-hop
+    schedule.
+
+    Wall-clock: the stacked scan engine, flat vs E={2, 4} median over
+    8 clients (same tiny-GPO round structure as the §11/§13 benches).
+    On one host this measures the Python-loop edge pre-reduce overhead,
+    not a network win — the byte section is where the topology pays.
+
+    Equivalence: the linear E=2 run's final loss against the flat run
+    (reassociation-level agreement), measured, not asserted.
+    """
+    from repro.configs import (AggConfig, CompressionConfig, FedConfig,
+                               GPOConfig, HierarchyConfig)
+    from repro.core import FederatedGPO
+    from repro.data import SurveyConfig, make_survey_data, split_groups
+
+    result = {}
+
+    # -- compiled two-hop collective bytes (subprocess dryrun --edges) --
+    if skip_lower:
+        result["lowered"] = _skipped("--skip-lower")
+    else:
+        def payload_gathers(r):
+            return sorted(b * m for k, b, m in r["collective_ops"]
+                          if k == "all-gather" and b * m >= 1024)
+
+        med_flat = _lower_comm_bytes("none", agg="median", clients=8)
+        med_hier = _lower_comm_bytes("none", agg="median", clients=8,
+                                     edges=4)
+        int8_hier = _lower_comm_bytes("int8", agg="median", clients=8,
+                                      edges=4)
+        avg_flat = _lower_comm_bytes("none", agg="fedavg", clients=8)
+        avg_hier = _lower_comm_bytes("none", agg="fedavg", clients=8,
+                                     edges=4)
+        [flat_ag] = payload_gathers(med_flat)
+        hier_ags = payload_gathers(med_hier)
+        cross = max(hier_ags)
+        int8_cross = min(payload_gathers(int8_hier))
+        result["lowered"] = {
+            "clients": 8, "edges": 4,
+            "robust_flat_all_gather_bytes": flat_ag,
+            "robust_two_hop_all_gather_bytes": hier_ags,
+            "cross_edge_bytes": cross,
+            "cross_edge_reduction": flat_ag / cross,
+            "two_hop_total_reduction": flat_ag / sum(hier_ags),
+            "int8_cross_edge_bytes": int8_cross,
+            "int8_cross_edge_reduction": flat_ag / int8_cross,
+            "linear_all_reduce_flat": avg_flat[
+                "collective_bytes_by_kind"].get("all-reduce", 0),
+            "linear_all_reduce_two_hop": avg_hier[
+                "collective_bytes_by_kind"].get("all-reduce", 0),
+        }
+        print(f"hier/lowered: flat gather {flat_ag:,.0f} B -> two-hop "
+              f"{hier_ags} B (cross-edge {flat_ag / cross:.1f}x smaller,"
+              f" int8 cross-edge {flat_ag / int8_cross:.1f}x)")
+
+    # -- stacked engine wall-clock + linear equivalence -----------------
+    data = make_survey_data(SurveyConfig(
+        num_groups=13, num_questions=16, d_embed=4, seed=0))
+    train_groups, eval_groups = split_groups(data, seed=0)  # 8 train
+    gcfg = GPOConfig(d_embed=4, d_model=8, num_layers=1, num_heads=1,
+                     d_ff=16)
+
+    def run_cell(agg, num_edges):
+        fcfg = FedConfig(num_clients=len(train_groups), rounds=rounds,
+                         local_epochs=6, eval_every=max(10, rounds),
+                         num_context=1, num_target=1, agg=agg,
+                         compression=CompressionConfig(
+                             kind="none", error_feedback=False),
+                         hierarchy=HierarchyConfig(num_edges=num_edges))
+        fed = FederatedGPO(gcfg, fcfg, data, train_groups, eval_groups)
+        hist = fed.run(rounds=rounds, engine="scan")  # compile + warm
+        dt = _best_of(lambda: fed.run(rounds=rounds, engine="scan"),
+                      reps)
+        return hist, rounds / dt
+
+    result["rounds"] = rounds
+    result["clients"] = int(len(train_groups))
+    for name, edges in (("median_flat", 1), ("median_e2", 2),
+                        ("median_e4", 4), ("fedavg_flat", 1),
+                        ("fedavg_e2", 2)):
+        agg = AggConfig(name=name.split("_")[0])
+        hist, rps = run_cell(agg, edges)
+        result[name] = {"edges": edges, "rounds_per_sec": rps,
+                        "final_loss": hist.round_loss[-1]}
+        print(f"hier/{name}: {rps:,.1f} rounds/s "
+              f"loss={hist.round_loss[-1]:.4f}")
+    result["linear_e2_final_loss_drift"] = abs(
+        result["fedavg_e2"]["final_loss"]
+        - result["fedavg_flat"]["final_loss"])
+    return result
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=200)
@@ -1014,6 +1119,13 @@ def main() -> None:
     ap.add_argument("--byz-rounds", type=int, default=25,
                     help="rounds per cell in the Byzantine grid (kept "
                          "short on purpose — see bench_byzantine)")
+    ap.add_argument("--hierarchy", action="store_true",
+                    help="also run the client→edge→server hierarchy "
+                         "benchmark and write BENCH_hier.json "
+                         "(DESIGN.md §14)")
+    ap.add_argument("--hier-rounds", type=int, default=30,
+                    help="rounds per cell in the hierarchy wall-clock "
+                         "sweep")
     ap.add_argument("--skip-lower", action="store_true",
                     help="skip the subprocess dryrun lowering in the "
                          "compression bench (the compiled all-gather "
@@ -1099,6 +1211,19 @@ def main() -> None:
         with open(BYZ_OUT_PATH, "w") as f:
             json.dump(byz_report, f, indent=2)
         print(f"wrote {os.path.abspath(BYZ_OUT_PATH)}")
+
+    if args.hierarchy:
+        hier_report = {
+            "backend": jax.default_backend(),
+            "xla_flags": os.environ.get("XLA_FLAGS", ""),
+            "prng": "rbg",
+            "hierarchy": bench_hierarchy(args.hier_rounds,
+                                         reps=min(args.reps, 2),
+                                         skip_lower=args.skip_lower),
+        }
+        with open(HIER_OUT_PATH, "w") as f:
+            json.dump(hier_report, f, indent=2)
+        print(f"wrote {os.path.abspath(HIER_OUT_PATH)}")
 
     if not args.skip_agg:
         agg_report = {

@@ -47,6 +47,12 @@ def main() -> None:
     #    from the CLI the same knobs are `train --trainer gpo
     #    --attack sign_flip --attackers 3 --agg krum` — the attack ×
     #    defense grid lives in `bench_round.py --byzantine`.
+    #    For client→edge→server aggregation (DESIGN.md §14) add
+    #      hierarchy=HierarchyConfig(num_edges=4)
+    #    — each edge pre-reduces its own client block before the
+    #    cross-edge hop (the robust family's big all-gather shrinks
+    #    from O(C·P) to O(E·P); `dryrun.py --gpo-fed --edges 4` and
+    #    `bench_round.py --hierarchy` show the compiled byte counts).
     gpo_cfg = GPOConfig(d_embed=data.phi.shape[-1])
     fed_cfg = FedConfig(num_clients=len(train_groups), rounds=150,
                         local_epochs=6, lr=3e-4, eval_every=25)

@@ -12,6 +12,7 @@ from repro.configs.base import (  # noqa: F401
     CompressionConfig,
     FedConfig,
     GPOConfig,
+    HierarchyConfig,
     InputShape,
     ModelConfig,
     PrivacyConfig,

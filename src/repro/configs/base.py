@@ -567,6 +567,52 @@ class AggConfig:
 
 
 @dataclass(frozen=True)
+class HierarchyConfig:
+    """Two-level client→edge→server aggregation topology (DESIGN.md §14).
+
+    ``num_edges`` E partitions the round's participants into E contiguous
+    edge shards (edge e owns client rows [e·C/E, (e+1)·C/E)); each edge
+    pre-reduces its own clients before a cross-edge reduction produces
+    the server update:
+
+    * linear family — per-edge weighted partial sums, summed across
+      edges (the same weighted moment, reassociated edge-first; the
+      sharded engine keeps its single psum, which IS the composed
+      two-hop on a real torus).
+    * robust family — each edge runs the server rule over its OWN
+      clients (per-edge trim / edge-local krum candidate selection) to
+      one candidate row, then the same rule runs over the E candidates
+      weighted by edge mass. The sharded engine's all-gather splits into
+      an intra-edge hop (C/E rows) plus a cross-edge hop of only E
+      candidate rows — O(E·P) instead of O(C·P) — and the cross-edge
+      hop carries the §10 int8 wire layout when the codec is on. The
+      breakdown point changes: attackers concentrated in one edge can
+      capture its candidate (see §14).
+
+    ``num_edges == 1`` disables the topology entirely: the pipeline's
+    flat aggregate stage is traced unchanged (bit-equal, pinned by
+    tests/test_hierarchy.py). Divisibility of the participant count by
+    ``num_edges`` is checked by the engines, where it is known.
+    """
+
+    num_edges: int = 1
+
+    @property
+    def enabled(self) -> bool:
+        return self.num_edges > 1
+
+    def validate(self, num_clients: Optional[int] = None) -> None:
+        if self.num_edges < 1:
+            raise ValueError("num_edges must be >= 1")
+        if (num_clients is not None and self.enabled
+                and num_clients % self.num_edges != 0):
+            raise ValueError(
+                f"hierarchy.num_edges={self.num_edges} must divide the "
+                f"round's participant count ({num_clients}): edges are "
+                "contiguous equal-size client shards")
+
+
+@dataclass(frozen=True)
 class FedConfig:
     """PluralLLM federated runtime (paper §3.1–3.2, §4.3)."""
 
@@ -623,6 +669,13 @@ class FedConfig:
     # privacy/codec/aggregation stages. The default (kind="none")
     # traces the exact pre-attack computation.
     adversary: AdversaryConfig = AdversaryConfig()
+    # two-level client→edge→server aggregation topology (DESIGN.md §14):
+    # num_edges edge shards pre-reduce their clients before the cross-
+    # edge reduction — the robust family's dominant all-gather shrinks
+    # from O(C·P) to O(E·P) cross-edge, multiplicative with the §10 int8
+    # wire layout. The default (num_edges=1) traces the exact flat
+    # aggregate stage.
+    hierarchy: HierarchyConfig = HierarchyConfig()
     # hard-error instead of warning when a configuration leaks
     # un-privatized client statistics around the DP release — today:
     # agg.name == "adaptive" keeps raw-loss EMAs (DESIGN.md §9) while

@@ -57,6 +57,13 @@ def convergence_round(losses: np.ndarray, frac: float = 0.95) -> int:
     if losses.size == 0:
         return 0
     start, final = losses[0], losses[-1]
+    if final > start:
+        # diverging curve: there IS no 95%-descent round — the threshold
+        # would sit above the starting loss, which round 0 satisfies
+        # vacuously. Report "never converged" (the last round), matching
+        # the no-crossing branch below. Constant curves (final == start)
+        # keep returning 0: zero descent is trivially achieved.
+        return len(losses) - 1
     threshold = start - frac * (start - final)
     idx = np.nonzero(losses <= threshold)[0]
     return int(idx[0]) if idx.size else len(losses) - 1

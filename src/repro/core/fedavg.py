@@ -32,9 +32,15 @@ PyTree = Any
 
 
 def normalize_weights(sizes: jnp.ndarray) -> jnp.ndarray:
-    """p_g = |D_g| / sum_g' |D_g'|  (Eq. 2)."""
+    """p_g = |D_g| / sum_g' |D_g'|  (Eq. 2).
+
+    The denominator is clamped so an all-zero size vector (the
+    empty-survivor round the §11 availability simulator can produce)
+    yields all-zero weights instead of NaNs; any real population
+    (sum >= 1 sample) is bit-unaffected by the clamp.
+    """
     sizes = jnp.asarray(sizes, jnp.float32)
-    return sizes / jnp.sum(sizes)
+    return sizes / jnp.maximum(jnp.sum(sizes), jnp.float32(1e-12))
 
 
 def fedavg_stacked(stacked_params: PyTree, weights: jnp.ndarray) -> PyTree:
@@ -68,26 +74,22 @@ def fedavg_allreduce(local_params: PyTree, weight: jnp.ndarray,
         local_params)
 
 
-# default-strategy aggregator for fedavg_flat, built once on first use
-# (the fedavg builder ignores num_clients; only adaptive consumes it)
-_FEDAVG_AGG = None
-
-
 def fedavg_flat(stacked_params: PyTree, weights: jnp.ndarray) -> PyTree:
     """Flattened-vector FedAvg (the Pallas `fedavg_reduce` contract),
     routed through the aggregation registry: the ``fedavg`` strategy's
     ``reduce_flat`` is the single implementation of the weighted flat
     mean (this helper predates the PR 2 registry and used to duplicate
-    it). The lazy import + cached aggregator keep the module import
-    graph acyclic — ``core.aggregation`` imports this module at top
-    level — without rebuilding the strategy per call."""
-    global _FEDAVG_AGG
-    if _FEDAVG_AGG is None:
-        from repro.configs.base import AggConfig
-        from repro.core.aggregation import make_aggregator
+    it). The imports stay lazy to keep the module graph acyclic —
+    ``core.aggregation`` imports this module at top level — but the
+    aggregator is built PER CALL: a module-level cache here once leaked
+    stale strategy state across configs and test runs (built once with
+    num_clients=0, never invalidated). The fedavg builder is closure
+    assembly only — no tracing — so per-call construction is free."""
+    from repro.configs.base import AggConfig
+    from repro.core.aggregation import make_aggregator
 
-        _FEDAVG_AGG = make_aggregator(AggConfig(), num_clients=0)
     like = tree_index(stacked_params, 0)
     vecs = tree_ravel_clients(stacked_params)  # (C, P)
-    avg = _FEDAVG_AGG.reduce_flat(vecs, jnp.asarray(weights, jnp.float32))
+    agg = make_aggregator(AggConfig(), num_clients=int(vecs.shape[0]))
+    avg = agg.reduce_flat(vecs, jnp.asarray(weights, jnp.float32))
     return tree_unflatten_from_vector(avg, like)

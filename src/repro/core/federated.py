@@ -193,6 +193,19 @@ class FederatedGPO:
         fed_cfg.compression.validate()
         fed_cfg.avail.validate()
         fed_cfg.adversary.validate()
+        # §14 edge topology: validated against the per-round participant
+        # count (edges partition the PARTICIPANTS, contiguous + equal
+        # size). The fault-aware round bypasses the hierarchy — buffered
+        # arrivals break the static edge assignment — so the two stay
+        # mutually exclusive rather than silently degrading.
+        m_part = min(fed_cfg.batch_groups or len(train_groups),
+                     len(train_groups))
+        fed_cfg.hierarchy.validate(m_part)
+        if fed_cfg.hierarchy.enabled and fed_cfg.avail.enabled:
+            raise ValueError(
+                "hierarchy.num_edges > 1 does not compose with the §11 "
+                "fault simulator: the buffered/masked reduce aggregates "
+                "flat (edge assignment is static per round)")
         dp.check_adaptive_privacy(fed_cfg)
         byz.check_defense_composition(fed_cfg)
         self.gpo_cfg, self.fed_cfg, self.data = gpo_cfg, fed_cfg, data
@@ -712,6 +725,18 @@ def make_sharded_round(gpo_cfg: GPOConfig, fed_cfg: FedConfig,
     fed_cfg.privacy.validate()
     fed_cfg.compression.validate()
     fed_cfg.adversary.validate()
+    fed_cfg.hierarchy.validate(fed_cfg.num_clients)
+    if fed_cfg.hierarchy.enabled:
+        # the two-hop schedule (§14) needs a leading 'edge' mesh axis of
+        # exactly num_edges shards in front of the intra-edge client
+        # axes — build the mesh with launch.mesh.make_edge_mesh
+        if (len(client_axes) < 2
+                or mesh.shape[client_axes[0]] != fed_cfg.hierarchy.num_edges):
+            raise ValueError(
+                f"hierarchy.num_edges={fed_cfg.hierarchy.num_edges} "
+                f"requires client_axes=('edge', ...) with a leading axis "
+                f"of that size; got {tuple(client_axes)} on mesh "
+                f"{dict(mesh.shape)}")
     byz.check_defense_composition(fed_cfg)
     priv = fed_cfg.privacy
     comp = fed_cfg.compression

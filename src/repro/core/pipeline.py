@@ -58,6 +58,7 @@ import jax.numpy as jnp
 from repro.configs.base import (
     AdversaryConfig,
     CompressionConfig,
+    HierarchyConfig,
     PrivacyConfig,
 )
 from repro.core import adversary as byz
@@ -94,6 +95,9 @@ class RoundPipeline:
     agg: ServerAggregator
     num_clients: Optional[int] = None
     use_pallas: bool = False
+    # two-level client→edge→server topology for the aggregate stage
+    # (DESIGN.md §14); the default (num_edges=1) is statically disabled
+    hierarchy: HierarchyConfig = HierarchyConfig()
 
     # -- static structure --------------------------------------------------
     @property
@@ -113,9 +117,11 @@ class RoundPipeline:
     @property
     def restructured(self) -> bool:
         """True when the round must materialize per-client released rows
-        (an active delta attack or server-side norm bounding); False
+        (an active delta attack, server-side norm bounding, or the §14
+        edge hierarchy — whose edge pre-reduce needs the rows); False
         keeps the pre-§13 fused dispatch byte-for-byte."""
-        return self.attack_delta or self.norm_bound > 0.0
+        return (self.attack_delta or self.norm_bound > 0.0
+                or self.hierarchy.enabled)
 
     def stages(self) -> tuple:
         """The declared ``[local_train, attack, privacy, codec,
@@ -193,6 +199,76 @@ class RoundPipeline:
             return byz.norm_clip_rows(rel, self.norm_bound)
         return rel
 
+    def hier_reduce_flat(self, rel, weights):
+        """Aggregate-stage reduce on materialized (rows, P) released
+        rows: the flat ``agg.reduce_flat`` at E=1, the two-level
+        client→edge→server reduce otherwise (DESIGN.md §14). Edge e owns
+        the contiguous row block [e·C/E, (e+1)·C/E); each edge runs the
+        configured rule over its OWN rows (the robust rules' trim depth
+        shrinks with the C/E edge population — their ``reduce_flat``
+        derives k from the input shape), then the linear family sums the
+        edge partials (the same weighted moment, reassociated) while the
+        robust family re-runs the rule over the E candidates weighted by
+        edge mass."""
+        E = self.hierarchy.num_edges
+        if E <= 1:
+            return self.agg.reduce_flat(rel, weights)
+        c = rel.shape[0]
+        v = rel.reshape(E, c // E, rel.shape[1])
+        w = weights.astype(jnp.float32).reshape(E, c // E)
+        if self.agg.linear:
+            # linear reduce_flat is the weighted flat sum, so the edge
+            # partials (computed against the globally-normalized
+            # weights) just add up to the server update
+            return jnp.sum(jnp.stack(
+                [self.agg.reduce_flat(v[e], w[e]) for e in range(E)]),
+                axis=0)
+        # robust rules with a surviving-weight renormalization are
+        # scale-invariant in the weights, but the k=0 trimmed-mean
+        # degenerate case is a plain weighted sum that assumes its
+        # weights total 1 — so each edge reduces against WITHIN-edge
+        # normalized weights (a proper edge mean either way) and the
+        # server rule weighs the candidates by edge mass
+        mass = jnp.sum(w, axis=1)  # (E,)
+        wn = w / jnp.maximum(mass, 1e-12)[:, None]
+        edge_rows = jnp.stack(
+            [self.agg.reduce_flat(v[e], wn[e]) for e in range(E)])
+        return self.agg.reduce_flat(edge_rows, mass)
+
+    def _two_hop_reduce(self, rel, weights, axes):
+        """§14 robust reduce for the sharded engine on an ('edge', …)
+        mesh: hop 1 all-gathers released rows WITHIN the edge
+        (``axes[1:]``) and every edge pre-reduces its own C/E rows to one
+        candidate (replicated in-edge); hop 2 all-gathers only the E
+        candidate rows across the edge axis (``axes[0]``) — carrying the
+        §10 int8 wire layout when the codec is on, with deterministic
+        round-to-nearest (the candidate is an edge-level value with no
+        per-client rounding key; it is identical on every in-edge
+        device) — and the server rule runs replicated over (E, P). The
+        dominant collective shrinks from O(C·P) cross-fleet to O(E·P)
+        cross-edge."""
+        agg, comp = self.agg, self.compression
+        edge_ax, intra = axes[0], axes[1:]
+        edge_vecs = jax.lax.all_gather(rel, intra, axis=0, tiled=True)
+        edge_w = jax.lax.all_gather(weights, intra, axis=0, tiled=True)
+        # within-edge normalized, as in hier_reduce_flat: the k=0
+        # trimmed-mean degenerate case is a weights-sum-to-1 linear sum
+        mass = jnp.sum(edge_w)
+        cand = agg.reduce_flat(
+            edge_vecs, edge_w / jnp.maximum(mass, 1e-12))[None, :]
+        mass = mass[None]  # (1,)
+        if comp.enabled and comp.kind == "int8":
+            q, scales = cx.quantize_int8(cand, uniform=None)
+            all_q = jax.lax.all_gather(q, edge_ax, axis=0, tiled=True)
+            all_s = jax.lax.all_gather(scales, edge_ax, axis=0,
+                                       tiled=True)
+            all_cand = cx.dequantize_int8(all_q, all_s)
+        else:
+            all_cand = jax.lax.all_gather(cand, edge_ax, axis=0,
+                                          tiled=True)
+        all_mass = jax.lax.all_gather(mass, edge_ax, axis=0, tiled=True)
+        return agg.reduce_flat(all_cand, all_mass)
+
     # -- full stacked tail: [attack →] privacy → codec → aggregate ---------
     def reduce_apply(self, server_state, global_params, deltas, weights,
                      keys, *, losses, idx, resid, byz_key=None):
@@ -237,7 +313,7 @@ class RoundPipeline:
         rel, new_r = cx.release_flat(vecs, keys, priv, comp, resid)
         rel = self._bound_rows(rel)
         delta = tree_unflatten_from_vector(
-            agg.reduce_flat(rel, w_eff), global_params)
+            self.hier_reduce_flat(rel, w_eff), global_params)
         new_global, server_state = agg.apply(
             server_state, global_params, delta, losses=losses, idx=idx)
         return new_global, server_state, new_r
@@ -340,7 +416,13 @@ class RoundPipeline:
         rel, new_resid = cx.release_flat(vecs, keys, priv, comp, resid)
         rel = self._bound_rows(rel)
         if agg.linear:
+            # ONE weighted psum over ALL client axes — on an ('edge',
+            # 'data') mesh this IS the composed two-hop partial-sum
+            # schedule (§14: the linear family's bytes are unchanged by
+            # the hierarchy)
             delta_vec = jax.lax.psum(agg.reduce_flat(rel, weights), axes)
+        elif self.hierarchy.enabled and len(axes) > 1:
+            delta_vec = self._two_hop_reduce(rel, weights, axes)
         else:
             all_vecs = jax.lax.all_gather(rel, axes, axis=0, tiled=True)
             all_w = jax.lax.all_gather(weights, axes, axis=0, tiled=True)
@@ -396,4 +478,5 @@ def make_pipeline(fed_cfg, *, agg: ServerAggregator,
         adversary=fed_cfg.adversary, privacy=fed_cfg.privacy,
         compression=fed_cfg.compression, agg=agg,
         num_clients=num_clients,
-        use_pallas=fed_cfg.use_pallas_aggregation)
+        use_pallas=fed_cfg.use_pallas_aggregation,
+        hierarchy=fed_cfg.hierarchy)

@@ -261,19 +261,24 @@ class PreferenceServer:
         requests, prefill the cache misses (batched, at each request's
         own ctx bucket so cache entries are batch-composition-independent
         and hits stay bit-equal), gather everyone's prefix K/V, decode
-        once, complete. Head-of-line requests whose ``deadline`` already
-        passed are dropped first (counted ``expired``, never decoded) —
-        under overload this sheds exactly the work nobody is waiting for
-        instead of letting it consume batch slots."""
+        once, complete. Requests whose ``deadline`` already passed are
+        dropped during batch assembly wherever they sit in the queue —
+        not just at the head — (counted ``expired``, never decoded),
+        while live requests keep strict FIFO order (the no-reorder
+        determinism contract): under overload this sheds exactly the
+        work nobody is waiting for instead of letting it consume batch
+        slots or return results after their deadline."""
         now = self.now()
-        while (self._queue and self._queue[0].deadline is not None
-               and now >= self._queue[0].deadline):
-            self._queue.popleft()
-            self.stats.expired += 1
-        if not self._queue:
+        reqs: List[Request] = []
+        while self._queue and len(reqs) < self.scfg.max_batch:
+            r = self._queue.popleft()
+            if r.deadline is not None and now >= r.deadline:
+                self.stats.expired += 1
+                continue
+            reqs.append(r)
+        if not reqs:
             return []
-        take = min(self.scfg.max_batch, len(self._queue))
-        reqs = [self._queue.popleft() for _ in range(take)]
+        take = len(reqs)
         ctx_b = _bucket_of(max(r.ctx_x.shape[0] for r in reqs),
                            self.scfg.ctx_buckets, "ctx")
         tgt_b = _bucket_of(max(r.tgt_x.shape[0] for r in reqs),

@@ -169,6 +169,7 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 
 def lower_gpo_round(agg_name: str, *, clients: int = 8,
+                    edges: int = 1,
                     use_pallas: bool = False,
                     use_pallas_attention: bool = False,
                     clip_norm: float = 0.0,
@@ -204,11 +205,19 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
     survivor weights are zeroed/renormalized shard-locally, so the
     linear family's collective schedule must keep the SAME single
     parameter-sized psum — tests/test_availability.py pins the byte
-    counts equal to the fault-free round."""
+    counts equal to the fault-free round.
+    ``edges`` > 1 compiles the §14 two-level client→edge→server round
+    on an (edges, clients/edges) ('edge', 'data') mesh: the robust
+    family's flat all-gather splits into an intra-edge hop (C/E rows)
+    plus a cross-edge hop of only E candidate rows (int8 when
+    ``compress="int8"``) — the per-op ``collective_ops`` entry makes the
+    two hops individually visible — while the linear family keeps its
+    one psum over both axes."""
     from jax.sharding import NamedSharding
     from repro.configs import (AdversaryConfig, AggConfig,
                                AvailabilityConfig, CompressionConfig,
-                               FedConfig, GPOConfig, PrivacyConfig)
+                               FedConfig, GPOConfig, HierarchyConfig,
+                               PrivacyConfig)
     from repro.core import make_aggregator
     from repro.core.availability import init_fault_state
     from repro.core.federated import make_sharded_round
@@ -220,7 +229,13 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
     from repro.optim import adam
     from repro.utils.pytree import tree_count_params
 
-    mesh = jax.make_mesh((clients,), ("data",))
+    if edges > 1:
+        # §14 two-level edge mesh: one client per device, E edge shards
+        mesh = jax.make_mesh((edges, clients // edges), ("edge", "data"))
+        caxes = ("edge", "data")
+    else:
+        mesh = jax.make_mesh((clients,), ("data",))
+        caxes = ("data",)
     data = make_survey_data(SurveyConfig(num_groups=clients,
                                          num_questions=30, d_embed=16,
                                          seed=0))
@@ -241,15 +256,17 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
                      use_pallas_aggregation=use_pallas,
                      use_pallas_attention=use_pallas_attention,
                      privacy=privacy, compression=compression,
-                     avail=avail, adversary=adversary)
+                     avail=avail, adversary=adversary,
+                     hierarchy=HierarchyConfig(num_edges=edges))
     opt = adam(fcfg.lr)
     agg = make_aggregator(fcfg.agg, num_clients=clients,
                           use_pallas=use_pallas)
     params = init_gpo_params(gcfg, jax.random.PRNGKey(0))
     server_state = agg.init(params)
-    round_fn = make_sharded_round(gcfg, fcfg, data, mesh, opt=opt, agg=agg)
+    round_fn = make_sharded_round(gcfg, fcfg, data, mesh,
+                                  client_axes=caxes, opt=opt, agg=agg)
 
-    spec = NamedSharding(mesh, P("data"))
+    spec = NamedSharding(mesh, P(caxes if len(caxes) > 1 else caxes[0]))
     shard = lambda t: jax.tree.map(  # noqa: E731
         lambda x: jax.ShapeDtypeStruct(
             (clients,) + tuple(x.shape), x.dtype, sharding=spec), t)
@@ -269,7 +286,7 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
     args = (cp, opt_s, keys, gids, w, srv)
     if faults:
         fault0 = init_fault_state(clients, tree_count_params(params))
-        f_shard = fault_state_shardings(mesh)
+        f_shard = fault_state_shardings(mesh, caxes)
         fault = jax.tree.map(
             lambda x, s: jax.ShapeDtypeStruct(tuple(x.shape), x.dtype,
                                               sharding=s),
@@ -292,10 +309,12 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
     coll = rl.parse_collectives(hlo)
     # trip-count-aware cross-check: collectives inside while loops count
     # once per iteration in hlo_cost's walk (DESIGN.md §6)
-    cost_coll = hlo_cost.analyze_hlo(hlo).collective_bytes
+    cost_totals = hlo_cost.analyze_hlo(hlo)
+    cost_coll = cost_totals.collective_bytes
     result = {
         "agg": agg_name,
         "clients": clients,
+        "edges": edges,
         "use_pallas_aggregation": use_pallas,
         "use_pallas_attention": use_pallas_attention,
         "private": privacy.enabled,
@@ -314,10 +333,16 @@ def lower_gpo_round(agg_name: str, *, clients: int = 8,
         "collective_count": coll.total_count,
         "hlo_cost_collective_bytes_by_kind": {
             k: float(v) for k, v in cost_coll.items()},
+        # per-op collective detail (kind, bytes, trip multiplier): makes
+        # the §14 two-hop schedule individually visible — the intra-edge
+        # and cross-edge all-gathers land as separate entries
+        "collective_ops": [[k, float(b), float(m)]
+                           for k, b, m in cost_totals.collective_ops],
         "memory": _mem_stats(compiled.memory_analysis()),
     }
     if verbose:
         print(f"== gpo-fed round x agg={agg_name} mesh={clients}"
+              + (f" edges={edges}" if edges > 1 else "")
               + (f" compress={compress}" if compress != "none" else "")
               + (" faults" if faults else "")
               + (f" attack={attack}({attackers})" if attack != "none"
@@ -342,6 +367,10 @@ def main() -> None:
                     help="aggregation strategy for --gpo-fed")
     ap.add_argument("--clients", type=int, default=8,
                     help="client-mesh size for --gpo-fed")
+    ap.add_argument("--edges", type=int, default=1,
+                    help="edge shards for the §14 two-level "
+                         "client→edge→server round (must divide "
+                         "--clients; 1 = flat)")
     ap.add_argument("--pallas-attn", action="store_true",
                     help="route --gpo-fed local training through the "
                          "banded custom-VJP attention kernels")
@@ -393,7 +422,7 @@ def main() -> None:
     try:
         if args.gpo_fed:
             result = lower_gpo_round(
-                args.agg, clients=args.clients,
+                args.agg, clients=args.clients, edges=args.edges,
                 use_pallas_attention=args.pallas_attn,
                 clip_norm=args.clip_norm if args.private else 0.0,
                 noise_multiplier=(args.noise_multiplier if args.private

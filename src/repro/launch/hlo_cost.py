@@ -92,6 +92,11 @@ class CostTotals:
     bytes: float = 0.0
     collective_bytes: dict = field(default_factory=dict)
     collective_counts: dict = field(default_factory=dict)
+    # per-op detail: (kind, payload bytes, trip multiplier) for every
+    # collective, in walk order. The kind-keyed dicts above sum these;
+    # the list keeps ops with the same kind separable — e.g. the §14
+    # two-hop schedule's intra-edge vs cross-edge all-gathers.
+    collective_ops: list = field(default_factory=list)
 
     def add_collective(self, kind: str, nbytes: float, mult: float):
         self.collective_bytes[kind] = (
@@ -216,6 +221,8 @@ class HloCost:
                         total.collective_counts[k] = (
                             total.collective_counts.get(k, 0.0)
                             + n * body.collective_counts.get(k, 0.0))
+                    for k, b, m in body.collective_ops:
+                        total.collective_ops.append((k, b, n * m))
                 continue
             if oc in ("fusion", "call", "async-start"):
                 cm = _CALLS_RE.search(op.line) or _TO_APPLY_RE.search(op.line)
@@ -230,6 +237,7 @@ class HloCost:
                     total.bytes += out_bytes + opnd_bytes
                     for k, v in inner.collective_bytes.items():
                         total.add_collective(k, v, 1.0)
+                    total.collective_ops.extend(inner.collective_ops)
                 continue
             if oc == "conditional":
                 branches = re.findall(r"%([\w.\-]+)", op.line.split(
@@ -244,6 +252,7 @@ class HloCost:
             base = oc.replace("-start", "")
             if base in COLLECTIVE_KINDS:
                 total.add_collective(base, out_bytes, 1.0)
+                total.collective_ops.append((base, float(out_bytes), 1.0))
                 total.bytes += out_bytes
                 continue
             if oc in ("dot", "convolution"):

@@ -22,9 +22,29 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_edge_mesh(num_edges: int, clients_per_edge: int):
+    """Two-level federation mesh (DESIGN.md §14): a leading 'edge' axis
+    of E edge shards in front of the intra-edge client ('data') axis.
+    Hand ``client_axes=('edge', 'data')`` to ``make_sharded_round`` with
+    ``FedConfig.hierarchy.num_edges == num_edges`` and the robust
+    family's aggregate stage compiles the real two-hop collective
+    schedule: an intra-edge all-gather of C/E rows, then a cross-edge
+    all-gather of only E candidate rows (int8 when the §10 codec is on).
+    The linear family keeps its single psum over both axes — which IS
+    the composed two-hop partial-sum schedule on a real torus."""
+    return jax.make_mesh((num_edges, clients_per_edge), ("edge", "data"))
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """The batch/client axes: ('pod', 'data') on multi-pod, else ('data',)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def client_axes(mesh) -> tuple[str, ...]:
+    """The federated CLIENT axes, in hop order: the hierarchical outer
+    axis first ('edge' on a §14 edge mesh, 'pod' multi-pod), then the
+    intra-shard 'data' axis."""
+    return tuple(a for a in mesh.axis_names if a in ("edge", "pod", "data"))
 
 
 def model_axis_size(mesh) -> int:

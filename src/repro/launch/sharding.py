@@ -138,6 +138,19 @@ def server_state_shardings(state: PyTree, mesh) -> PyTree:
     return jax.tree.map(lambda _: repl, state)
 
 
+def client_delta_sharding(mesh, client_axes=None) -> NamedSharding:
+    """Sharding for client-stacked round arguments — (C, ...) leaves
+    whose leading axis is the global client axis — on a federation mesh:
+    the leading dim shards over the client axes, ('edge', 'data') on the
+    §14 two-level edge mesh, ('pod', 'data') multi-pod, ('data',)
+    otherwise (``client_axes=None`` derives them from the mesh via
+    ``launch.mesh.client_axes``)."""
+    from repro.launch.mesh import client_axes as _client_axes
+
+    ax = tuple(client_axes) if client_axes else _client_axes(mesh)
+    return NamedSharding(mesh, P(ax if len(ax) > 1 else ax[0]))
+
+
 def fault_state_shardings(mesh, client_axes=("data",)) -> PyTree:
     """Shardings for ``core.availability.FaultState`` on the production
     mesh (DESIGN.md §11). The schedule metadata — round counter, crash-
@@ -146,7 +159,8 @@ def fault_state_shardings(mesh, client_axes=("data",)) -> PyTree:
     replicated fault key, so no collective is spent agreeing on who
     failed. Only ``pending`` (the in-flight straggler payloads, the one
     parameter-sized leaf, (C, P)) shards over the client axes with its
-    owners."""
+    owners — multi-axis layouts (('pod', 'data'), or the §14
+    ('edge', 'data') edge mesh) pass straight through."""
     from repro.core.availability import FaultState
 
     ax = tuple(client_axes)

@@ -186,6 +186,21 @@ def test_masked_mean_weights():
     np.testing.assert_array_equal(np.asarray(zero), np.zeros(4))
 
 
+def test_normalize_weights_all_zero_sizes_is_finite():
+    """Regression: an all-zero size vector — every sampled client lost
+    its data, the empty-survivor edge the availability simulator can
+    produce — once divided by zero in ``normalize_weights``. The clamped
+    denominator returns all-zero weights (a no-op round), and any real
+    population is bit-unaffected by the clamp."""
+    from repro.core import normalize_weights
+
+    w = normalize_weights(jnp.zeros((4,)))
+    assert np.isfinite(np.asarray(w)).all()
+    np.testing.assert_array_equal(np.asarray(w), np.zeros(4))
+    w2 = normalize_weights(jnp.array([1.0, 3.0]))
+    np.testing.assert_allclose(np.asarray(w2), [0.25, 0.75], rtol=1e-6)
+
+
 @pytest.mark.parametrize("name,frac", [("median", 0.0),
                                        ("trimmed_mean", 0.25)])
 def test_masked_robust_reduce_matches_dense_on_survivors(name, frac):

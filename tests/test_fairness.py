@@ -121,11 +121,13 @@ def test_convergence_round_degenerate_curves():
     assert convergence_round(np.array([1.0])) == 0
     # constant loss: zero descent, threshold == start, hit at round 0
     assert convergence_round(np.full(10, 0.5)) == 0
-    # loss that INCREASES: final > start, threshold sits above start so
-    # round 0 satisfies it (the 95%-of-descent contract degenerates
-    # gracefully instead of returning an out-of-range index)
-    r = convergence_round(np.linspace(0.1, 1.0, 20))
-    assert 0 <= r < 20
+    # loss that INCREASES: final > start means no 95%-descent round
+    # exists — it must report the LAST round ("never converged"), not
+    # round 0 (the old threshold sat above losses[0], so a diverging run
+    # claimed instant convergence)
+    assert convergence_round(np.linspace(0.1, 1.0, 20)) == 19
+    # a curve that doubles then plateaus is still divergent end-to-end
+    assert convergence_round(np.array([1.0, 2.0, 2.0, 2.0])) == 3
 
 
 def test_convergence_round_non_monotone_never_reaches_threshold():

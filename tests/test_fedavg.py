@@ -53,6 +53,35 @@ def test_aggregate_linearity_and_flat_equivalence():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
 
 
+def test_fedavg_flat_ignores_stale_module_cache():
+    """Regression: ``fedavg_flat`` once cached a module-level aggregator
+    (built on first use with num_clients=0, never invalidated), so stale
+    strategy state injected into the module leaked into every later
+    call. The helper must build its registry aggregator per call — a
+    poisoned module-level cache attribute has no effect, and the result
+    is the exact weighted mean."""
+    from repro.configs import AggConfig
+    from repro.core import fedavg as fedavg_mod
+    from repro.core.aggregation import make_aggregator
+
+    key = jax.random.PRNGKey(2)
+    stacked = _tree(key, 3)
+    w = jnp.array([0.2, 0.3, 0.5])
+    # poison the pre-fix cache slot with a non-linear strategy: if
+    # fedavg_flat consults it, the result is a coordinate median, not
+    # the weighted mean
+    fedavg_mod._FEDAVG_AGG = make_aggregator(AggConfig(name="median"),
+                                             num_clients=3)
+    try:
+        got = fedavg_flat(stacked, w)
+    finally:
+        del fedavg_mod._FEDAVG_AGG
+    want = fedavg_stacked(stacked, w)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6)
+
+
 def test_federated_learns_and_evaluates():
     data = make_survey_data(SurveyConfig(
         num_groups=8, num_questions=40, d_embed=24, seed=1))

@@ -424,6 +424,28 @@ def test_expired_head_of_line_requests_dropped():
     assert all(0 not in b.rids and 1 not in b.rids for b in srv.batches)
 
 
+def test_expired_mid_queue_requests_dropped():
+    """Regression: expiry once only checked the HEAD of the queue
+    (``_queue[0]``), so an expired request sitting behind a fresh head
+    was still decoded and returned after its deadline. Batch assembly
+    must skip expired entries ANYWHERE in the queue (counted in
+    stats.expired, never decoded) while the live requests keep strict
+    FIFO order — the no-reorder determinism contract."""
+    srv = PreferenceServer(_params(0), CFG, SCFG, num_options=5)
+    head = _request(0, 70)
+    head.deadline = srv.now() + 60.0  # fresh head shields the queue
+    srv.submit(head)
+    stale = _request(1, 71)
+    stale.deadline = -1.0  # already expired, BEHIND the fresh head
+    srv.submit(stale)
+    srv.submit(_request(2, 72))  # no deadline: live
+    out = srv.step()
+    assert [c.rid for c in out] == [0, 2]  # FIFO among live requests
+    assert srv.stats.expired == 1
+    assert srv.stats.completed == 2
+    assert all(1 not in b.rids for b in srv.batches)
+
+
 def test_deadline_none_never_expires():
     """Requests without a deadline keep the pre-deadline behavior
     exactly: nothing is dropped, stats.expired stays 0."""
